@@ -1,0 +1,80 @@
+"""Roofline report: reads the dry-run JSONs, (re)computes the three terms
+under the per-device convention, and renders the EXPERIMENTS.md tables.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+from pathlib import Path
+
+from repro.configs import get_config
+from repro.launch.analysis import (
+    roofline_terms, model_flops, active_param_count)
+
+
+def reprocess(path: Path) -> dict:
+    d = json.loads(path.read_text())
+    cfg = get_config(d["arch"])
+    n_active = active_param_count(cfg, d["n_params"])
+    kind = "train" if d["shape"].startswith("train") else "serve"
+    d["n_active_params"] = n_active
+    d["roofline"] = roofline_terms(
+        d["cost"]["hlo_flops"], d["cost"]["hlo_bytes"],
+        d["collective_bytes_total"], d["n_chips"])
+    shape_tokens = {"train_4k": 4096 * 256, "prefill_32k": 32768 * 32,
+                    "decode_32k": 128, "long_500k": 1}
+    d["model_flops"] = model_flops(n_active, shape_tokens[d["shape"]], kind)
+    d["useful_flops_ratio"] = d["model_flops"] / (
+        d["cost"]["hlo_flops"] * d["n_chips"]) if d["cost"]["hlo_flops"] else 0.0
+    path.write_text(json.dumps(d, indent=1))
+    return d
+
+
+def render_table(results, mesh_tag: str) -> str:
+    lines = [
+        f"### Mesh {mesh_tag} ({results[0]['n_chips']} chips) — "
+        "scan-corrected terms where available (* = uncorrected)",
+        "",
+        "| arch | shape | GiB/dev | compute (s) | memory (s) | collective (s)"
+        " | dominant | roofline frac | useful FLOPs |",
+        "|---|---|---:|---:|---:|---:|---|---:|---:|",
+    ]
+    for d in results:
+        corr = d.get("corrected")
+        r = corr["roofline"] if corr else d["roofline"]
+        useful = (corr or d)["useful_flops_ratio"]
+        star = "" if corr else "*"
+        lines.append(
+            f"| {d['arch']}{star} | {d['shape']} "
+            f"| {d['memory']['peak_bytes_per_device']/2**30:.2f} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | {r['dominant'].replace('_s','')} "
+            f"| {r['roofline_fraction']*100:.1f}% "
+            f"| {useful*100:.1f}% |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--markdown-out", default=None)
+    args = ap.parse_args()
+    by_mesh = {}
+    for f in sorted(glob.glob(f"{args.dir}/*.json")):
+        d = reprocess(Path(f))
+        by_mesh.setdefault(d["mesh"], []).append(d)
+    out = []
+    for mesh_tag, results in sorted(by_mesh.items()):
+        out.append(render_table(results, mesh_tag))
+        out.append("")
+    text = "\n".join(out)
+    print(text)
+    if args.markdown_out:
+        Path(args.markdown_out).write_text(text)
+
+
+if __name__ == "__main__":
+    main()

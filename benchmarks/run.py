@@ -1,0 +1,121 @@
+"""Benchmark harness — one entry per paper table + framework micro-benches.
+Prints ``name,us_per_call,derived`` CSV rows (harness contract).
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _bench(fn, *args, repeats=3):
+    fn(*args)                                   # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args)
+        jax.tree_util.tree_leaves(out)[0].block_until_ready()
+    return (time.perf_counter() - t0) / repeats * 1e6
+
+
+def bench_table1(quick):
+    from benchmarks.table1_scalability import run
+    rows = run(n_scenes=2 if quick else 3, scene=256 if quick else 512,
+               repeats=1 if quick else 3)
+    out = []
+    for alg, t, count in rows:
+        speedup = t[1] / t[4]
+        out.append((f"table1/{alg}", t[1] * 1e6, f"speedup4={speedup:.2f}"))
+    return out
+
+
+def bench_table2(quick):
+    from benchmarks.table2_counts import run
+    results = run(scene=256 if quick else 512, ns=(3,) if quick else (3, 20))
+    out = []
+    for (alg, n), c in sorted(results.items()):
+        out.append((f"table2/{alg}_N{n}", 0.0, f"count={c}"))
+    return out
+
+
+def bench_kernels(quick):
+    from repro.kernels import ops, ref
+    from repro.data.landsat import synthetic_scene
+    img = jnp.asarray(np.stack([synthetic_scene(256, 256, i)
+                                for i in range(2)]))
+    out = []
+    for name, pallas_fn, ref_fn in [
+        ("harris", lambda x: ops.harris(x), lambda x: ref.harris(x)),
+        ("blur", lambda x: ops.gaussian_blur(x, 1.6),
+         lambda x: ref.gaussian_blur(x, 1.6)),
+        ("fast", lambda x: ops.fast_score(x), lambda x: ref.fast_score(x)),
+    ]:
+        t_ref = _bench(jax.jit(ref_fn), img)
+        # interpret-mode pallas timing is not meaningful perf; report the
+        # ref wall time and allclose-verified status as the derived column
+        a = np.asarray(pallas_fn(img))
+        b = np.asarray(ref_fn(img))
+        ok = bool(np.allclose(a, b, rtol=1e-4, atol=1e-5))
+        out.append((f"kernel/{name}", t_ref, f"pallas_allclose={ok}"))
+    return out
+
+
+def bench_lm_step(quick):
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.optim import AdamW
+    from repro.train.step import (make_train_step, make_init_fn,
+                                  TrainStepConfig)
+    from repro.data.tokens import synthetic_lm_batch
+    out = []
+    for arch in (["smollm-135m"] if quick else
+                 ["smollm-135m", "xlstm-350m", "zamba2-2.7b"]):
+        cfg = get_config(arch).reduced().replace(remat="nothing")
+        model = build_model(cfg)
+        opt = AdamW()
+        scfg = TrainStepConfig()
+        state = jax.jit(make_init_fn(model, opt, scfg))(jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(model, opt, scfg))
+        batch = {k: jnp.asarray(v) for k, v in
+                 synthetic_lm_batch(2, 64, cfg.vocab_size).items()}
+        us = _bench(lambda s, b: step(s, b)[1]["loss"], state, batch)
+        out.append((f"train_step/{arch}_reduced", us, "tokens=128"))
+    return out
+
+
+def bench_roofline(quick):
+    """Roofline terms come from the dry-run artifacts (separate pipeline —
+    benchmarks/roofline.py); surface the headline cells here."""
+    import glob
+    import json
+    out = []
+    for f in sorted(glob.glob("experiments/dryrun/16x16__*.json")):
+        d = json.load(open(f))
+        r = (d["corrected"]["roofline"] if "corrected" in d
+             else d["roofline"])
+        out.append((f"roofline/{d['arch']}__{d['shape']}",
+                    r["compute_s"] * 1e6,
+                    f"dom={r['dominant']};frac={r['roofline_fraction']:.3f}"))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args, _ = ap.parse_known_args()
+    print("name,us_per_call,derived")
+    for section in (bench_table2, bench_table1, bench_kernels,
+                    bench_lm_step, bench_roofline):
+        try:
+            for name, us, derived in section(args.quick):
+                print(f"{name},{us:.1f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            print(f"{section.__name__},0,ERROR={e!r}")
+
+
+if __name__ == "__main__":
+    main()

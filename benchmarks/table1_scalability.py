@@ -1,0 +1,70 @@
+"""Paper Table 1 analogue: horizontal scalability of every algorithm.
+
+The paper measures wall-clock on 1/2/4 Hadoop nodes (N=3 and N=20 LandSat
+scenes).  Here the worker axis is simulated by partitioning the same tile
+bundle into w independent shards and executing them sequentially on the one
+CPU device, measuring per-shard wall time; the reported t(w) is the MAX
+shard time (the straggler defines makespan, as in MapReduce).  Speedup(w) =
+t(1)/t(w).  The paper's qualitative claims to reproduce:
+
+  * compute-heavy algorithms (SIFT) scale near-linearly,
+  * tiny-kernel algorithms (FAST) scale sub-linearly (scheduling overhead —
+    here: per-shard dispatch + compile amortization).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.difet_paper import DifetConfig, PAPER_ALGORITHMS
+from repro.core.bundle import bundle_scenes
+from repro.core.engine import extract_features
+from repro.data.landsat import synthetic_scene
+
+
+def run(n_scenes=3, scene=512, tile=128, workers=(1, 2, 4), repeats=1):
+    cfg = DifetConfig(tile=tile, halo=24, max_keypoints_per_tile=128)
+    scenes = [synthetic_scene(scene, scene, seed=i) for i in range(n_scenes)]
+    bundle = bundle_scenes(scenes, cfg)
+    rows = []
+    for alg in PAPER_ALGORITHMS:
+        fn = jax.jit(lambda t, h, a=alg: extract_features(t, h, a, cfg))
+        times = {}
+        counts = {}
+        for w in workers:
+            splits = np.array_split(np.arange(len(bundle)), w)
+            # warmup/compile once per shard shape
+            for s in {len(s) for s in splits}:
+                fn(bundle.tiles[:s], bundle.headers[:s])["total_count"].block_until_ready()
+            shard_times = []
+            total = 0
+            for s in splits:
+                t0 = time.perf_counter()
+                for _ in range(repeats):
+                    r = fn(bundle.tiles[s], bundle.headers[s])
+                    r["total_count"].block_until_ready()
+                shard_times.append((time.perf_counter() - t0) / repeats)
+                total += int(r["total_count"])
+            times[w] = max(shard_times)        # makespan = slowest shard
+            counts[w] = total
+        assert len(set(counts.values())) == 1, (alg, counts)
+        rows.append((alg, times, counts[workers[0]]))
+    return rows
+
+
+def main():
+    rows = run()
+    print("# Table 1 analogue: simulated horizontal scalability "
+          "(max-shard makespan, seconds)")
+    print(f"{'algorithm':12s} {'w=1':>8s} {'w=2':>8s} {'w=4':>8s} "
+          f"{'speedup4':>9s} {'count':>8s}")
+    for alg, t, c in rows:
+        print(f"{alg:12s} {t[1]:8.3f} {t[2]:8.3f} {t[4]:8.3f} "
+              f"{t[1]/t[4]:9.2f} {c:8d}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

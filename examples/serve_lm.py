@@ -1,0 +1,27 @@
+"""Batched serving example: prefill-free greedy decode with a KV cache
+(cache donation keeps decode memory flat), on a reduced config.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import greedy_generate
+
+for arch in ("smollm-135m", "xlstm-350m", "zamba2-2.7b"):
+    cfg = get_config(arch).reduced().replace(remat="nothing")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = jnp.asarray(np.random.RandomState(0).randint(
+        0, cfg.vocab_size, (4, 8)), jnp.int32)           # batch of 4 requests
+    t0 = time.time()
+    out = greedy_generate(model, params, prompt, n_steps=16)
+    dt = time.time() - t0
+    print(f"{arch:14s} generated {out.shape} tokens in {dt:.1f}s "
+          f"(batched greedy, KV/state cache)")
+    print(f"   first request: {np.asarray(out[0]).tolist()}")

@@ -1,0 +1,20 @@
+"""End-to-end training driver (deliverable b): train a reduced SmolLM for a
+few hundred steps on CPU with checkpointing; loss must visibly decrease.
+On a TPU pod, drop --reduced and the production mesh/sharding applies.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    args = ["--arch", "smollm-135m", "--reduced", "--steps", "300",
+            "--batch", "8", "--seq", "128", "--ckpt-dir", "/tmp/repro_ckpt",
+            "--ckpt-every", "100"]
+    # pass-through overrides, e.g. --steps 50
+    extra = sys.argv[1:]
+    if "--steps" in extra:
+        i = args.index("--steps")
+        del args[i:i + 2]
+    main(args + extra)

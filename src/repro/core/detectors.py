@@ -1,0 +1,173 @@
+"""Corner / interest-point detectors: Harris, Shi-Tomasi, FAST, plus the
+SIFT DoG-extrema and SURF fast-Hessian detection maps.
+
+Each detector returns a dense per-pixel *response map*; NMS + capacity-K
+selection (``repro.core.nms``) turns maps into keypoints.  Dense maps are
+what make the TPU adaptation work: counts (paper Table 2) are exact even
+when the keypoint list is capacity-truncated.
+
+Harris / Shi-Tomasi / FAST response hot-loops have Pallas TPU kernels in
+``repro.kernels`` (``use_pallas=True``); the jnp implementations here are
+the oracles they are tested against.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pyramid import (
+    blur_separable, sobel_gradients, gaussian_pyramid, dog_pyramid,
+    integral_image, box_sum,
+)
+
+
+# ---------------------------------------------------------------------------
+# structure tensor: Harris & Shi-Tomasi
+# ---------------------------------------------------------------------------
+def structure_tensor(img, sigma: float = 1.0):
+    gx, gy = sobel_gradients(img)
+    ixx = blur_separable(gx * gx, sigma)
+    iyy = blur_separable(gy * gy, sigma)
+    ixy = blur_separable(gx * gy, sigma)
+    return ixx, iyy, ixy
+
+
+def harris_response(img, k: float = 0.04, sigma: float = 1.0,
+                    use_pallas: bool = False):
+    """R = det(M) - k * trace(M)^2  (paper's Harris mapper, steps 2-3)."""
+    if use_pallas:
+        from repro.kernels.ops import harris as _pallas
+        return _pallas(img, k=k, sigma=sigma, shi_tomasi=False)
+    ixx, iyy, ixy = structure_tensor(img, sigma)
+    det = ixx * iyy - ixy * ixy
+    tr = ixx + iyy
+    return det - k * tr * tr
+
+
+def shi_tomasi_response(img, sigma: float = 1.0, use_pallas: bool = False):
+    """min-eigenvalue response: lambda_min of the structure tensor."""
+    if use_pallas:
+        from repro.kernels.ops import harris as _pallas
+        return _pallas(img, k=0.0, sigma=sigma, shi_tomasi=True)
+    ixx, iyy, ixy = structure_tensor(img, sigma)
+    half_tr = 0.5 * (ixx + iyy)
+    rad = jnp.sqrt(jnp.maximum(
+        0.25 * (ixx - iyy) ** 2 + ixy * ixy, 0.0))
+    return half_tr - rad
+
+
+# ---------------------------------------------------------------------------
+# FAST segment test
+# ---------------------------------------------------------------------------
+# Bresenham circle of radius 3: 16 offsets in order.
+FAST_OFFSETS = np.array([
+    (-3, 0), (-3, 1), (-2, 2), (-1, 3), (0, 3), (1, 3), (2, 2), (3, 1),
+    (3, 0), (3, -1), (2, -2), (1, -3), (0, -3), (-1, -3), (-2, -2), (-3, -1),
+], np.int32)   # (dy, dx)
+
+
+def _circle_values(img):
+    """Stack the 16 circle-neighbour images: [..., 16, H, W]."""
+    h, w = img.shape[-2], img.shape[-1]
+    p = jnp.pad(img, [(0, 0)] * (img.ndim - 2) + [(3, 3), (3, 3)],
+                mode="reflect")
+    vals = [p[..., 3 + dy:3 + dy + h, 3 + dx:3 + dx + w]
+            for dy, dx in FAST_OFFSETS]
+    return jnp.stack(vals, axis=-3)
+
+
+def _arc_max_run(flags):
+    """flags [..., 16, H, W] bool -> max circular run length [..., H, W].
+
+    Branch-free: duplicate the ring, then a length-``n`` window is all-true
+    iff the windowed sum equals n; take the max window size via cumsum.
+    """
+    f = jnp.concatenate([flags, flags], axis=-3).astype(jnp.int32)
+    c = jnp.cumsum(f, axis=-3)                              # [..., 32, H, W]
+    c = jnp.concatenate([jnp.zeros_like(c[..., :1, :, :]), c], axis=-3)
+    best = jnp.zeros(flags.shape[:-3] + flags.shape[-2:], jnp.int32)
+    for n in range(1, 17):
+        run = (c[..., n:, :, :] - c[..., :-n, :, :]) == n   # any n-window
+        best = jnp.maximum(best, n * run.any(axis=-3).astype(jnp.int32))
+    return best
+
+
+def fast_score(img, threshold: float = 0.15, arc: int = 9,
+               use_pallas: bool = False):
+    """FAST-N score map: 0 where not a corner, else sum |I_p - I_center| - t
+    over the contiguous arc pixels (OpenCV-style score)."""
+    if use_pallas:
+        from repro.kernels.ops import fast_score as _pallas
+        return _pallas(img, threshold=threshold, arc=arc)
+    circ = _circle_values(img)                              # [..., 16, H, W]
+    center = img[..., None, :, :]
+    brighter = circ > center + threshold
+    darker = circ < center - threshold
+    run_b = _arc_max_run(brighter)
+    run_d = _arc_max_run(darker)
+    is_corner = (run_b >= arc) | (run_d >= arc)
+    diff = jnp.abs(circ - center) - threshold
+    score_b = jnp.where(brighter, diff, 0.0).sum(axis=-3)
+    score_d = jnp.where(darker, diff, 0.0).sum(axis=-3)
+    return jnp.where(is_corner, jnp.maximum(score_b, score_d), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# SIFT detection: DoG scale-space extrema
+# ---------------------------------------------------------------------------
+def sift_dog_response(img, n_octaves=4, scales_per_octave=3,
+                      contrast_threshold=0.04, use_pallas: bool = False):
+    """Returns the octave-0 extrema response map [..., H, W] (full-res) plus
+    per-octave responses; response = |DoG| where the pixel is a 3x3x3
+    scale-space extremum above the contrast threshold, else 0."""
+    octs = gaussian_pyramid(img, n_octaves, scales_per_octave,
+                            use_pallas=use_pallas)
+    dogs = dog_pyramid(octs)
+    responses = []
+    for d in dogs:                                          # [..., S, H, W]
+        s = d.shape[-3]
+        mid = d[..., 1:s - 1, :, :]
+        p = jnp.pad(d, [(0, 0)] * (d.ndim - 3) + [(0, 0), (1, 1), (1, 1)],
+                    mode="reflect")
+        neigh = []
+        for ds in (-1, 0, 1):
+            for dy in (-1, 0, 1):
+                for dx in (-1, 0, 1):
+                    if ds == 0 and dy == 0 and dx == 0:
+                        continue
+                    neigh.append(p[..., 1 + ds:1 + ds + s - 2,
+                                   1 + dy:1 + dy + mid.shape[-2],
+                                   1 + dx:1 + dx + mid.shape[-1]])
+        neigh = jnp.stack(neigh, axis=0)
+        is_max = (mid > neigh.max(axis=0))
+        is_min = (mid < neigh.min(axis=0))
+        resp = jnp.where((is_max | is_min)
+                         & (jnp.abs(mid) > contrast_threshold),
+                         jnp.abs(mid), 0.0)
+        responses.append(resp.max(axis=-3))                 # over scales
+    return responses
+
+
+# ---------------------------------------------------------------------------
+# SURF detection: fast-Hessian (box-filter approximation, 9x9 lobe)
+# ---------------------------------------------------------------------------
+def surf_hessian_response(img, use_pallas: bool = False):
+    """det(H_approx) with 9x9 box filters (SURF's first scale), normalized.
+
+    Dxx: lobes 5(h) x 3(w); weights (1, -2, 1); Dyy transposed; Dxy four
+    3x3 corner boxes with weights (+1, -1, -1, +1).
+    """
+    ii = integral_image(img)
+    # Dxx: three vertical-stacked boxes of 5x3 centered
+    dxx = (box_sum(ii, -2, -4, 5, 3) - 2 * box_sum(ii, -2, -1, 5, 3)
+           + box_sum(ii, -2, 2, 5, 3))
+    dyy = (box_sum(ii, -4, -2, 3, 5) - 2 * box_sum(ii, -1, -2, 3, 5)
+           + box_sum(ii, 2, -2, 3, 5))
+    dxy = (box_sum(ii, -4, 1, 3, 3) + box_sum(ii, 1, -4, 3, 3)
+           - box_sum(ii, -4, -4, 3, 3) - box_sum(ii, 1, 1, 3, 3))
+    norm = 1.0 / 81.0
+    dxx, dyy, dxy = dxx * norm, dyy * norm, dxy * norm
+    return dxx * dyy - (0.9 * dxy) ** 2

@@ -1,0 +1,155 @@
+"""DIFET execution engine: the paper's map/shuffle/reduce on a TPU mesh.
+
+Paper (Hadoop)                      Here (SPMD)
+--------------                      -----------------------------------------
+HIB bundle in HDFS                  TileBundle sharded over the `data` axis
+mapper per image                    vmapped per-tile extractor, jit-compiled
+  (decode→gray→detect→describe)       (detect → NMS → top-K → describe)
+shuffle                             implicit resharding of per-tile results
+reduce (collect outputs)            psum of counts + global top-K merge
+
+The per-tile map needs no cross-tile communication (the paper's "good
+locality" of LIFs); the only collectives are the final count all-reduce and
+the top-K gather — which is why the workload scales out near-linearly
+(Table 1) and why we reproduce that with a collective-light schedule.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.difet_paper import DifetConfig
+from repro.core import detectors as D
+from repro.core import descriptors as DS
+from repro.core import nms
+from repro.distributed.sharding import shard_activation
+
+
+class AlgorithmSpec(NamedTuple):
+    response: Callable            # (img, cfg, use_pallas) -> response map
+    describe: Optional[Callable]  # (img, ys, xs) -> [K, D] or None
+    threshold: Callable           # cfg -> absolute response threshold
+
+
+def _harris_resp(img, cfg, use_pallas):
+    return D.harris_response(img, k=cfg.harris_k, use_pallas=use_pallas)
+
+
+def _shi_resp(img, cfg, use_pallas):
+    return D.shi_tomasi_response(img, use_pallas=use_pallas)
+
+
+def _fast_resp(img, cfg, use_pallas):
+    return D.fast_score(img, threshold=cfg.fast_threshold, arc=cfg.fast_arc,
+                        use_pallas=use_pallas)
+
+
+def _sift_resp(img, cfg, use_pallas):
+    # octave-0 (full-res) extrema map drives keypoints.  OpenCV divides the
+    # nominal contrast threshold by scales_per_octave — mirror that.
+    return D.sift_dog_response(
+        img, cfg.n_octaves, cfg.scales_per_octave,
+        cfg.sift_contrast_threshold / cfg.scales_per_octave,
+        use_pallas=use_pallas)[0]
+
+
+def _surf_resp(img, cfg, use_pallas):
+    return D.surf_hessian_response(img)
+
+
+# paper thresholds are on 8-bit images; ours are [0,1] — rescale where the
+# response is quadratic in intensity (hessian/structure-tensor) vs linear.
+ALGORITHMS: Dict[str, AlgorithmSpec] = {
+    "harris": AlgorithmSpec(_harris_resp, None,
+                            lambda c: c.harris_threshold * 1e-4),
+    "shi_tomasi": AlgorithmSpec(_shi_resp, None,
+                                lambda c: c.shi_tomasi_threshold * 1e-2),
+    "sift": AlgorithmSpec(_sift_resp, DS.sift_descriptors,
+                          lambda c: c.sift_contrast_threshold
+                          / c.scales_per_octave),
+    "surf": AlgorithmSpec(_surf_resp, DS.surf_descriptors,
+                          lambda c: c.surf_hessian_threshold / 255.0 ** 2),
+    "fast": AlgorithmSpec(_fast_resp, None, lambda c: 0.0),
+    "brief": AlgorithmSpec(_fast_resp, DS.brief_descriptors,
+                           lambda c: 0.0),
+    "orb": AlgorithmSpec(_fast_resp, DS.orb_descriptors, lambda c: 0.0),
+}
+
+
+def extract_tile(algorithm: str, cfg: DifetConfig, tile, header,
+                 use_pallas: bool = False):
+    """The DIFET 'map function' for one tile (cf. the paper's pseudo-code:
+    convert → grayscale → detect → describe → emit).  Returns a dict of
+    fixed-shape features."""
+    spec = ALGORITHMS[algorithm]
+    resp = spec.response(tile, cfg, use_pallas)
+    thr = spec.threshold(cfg)
+    valid_h, valid_w = header[3], header[4]
+    not_pad = header[5] == 0
+    mask = nms.interior_mask(resp.shape, cfg.halo, valid_h, valid_w) & not_pad
+    count = nms.count_above(resp, thr, mask)
+    resp_nms = nms.nms3x3(resp)
+    k = cfg.max_keypoints_per_tile
+    ys, xs, scores, valid = nms.topk_keypoints(resp_nms, k, thr, mask)
+    out = {"count": count, "scores": scores, "valid": valid}
+    # global scene coordinates (interior-relative)
+    out["ys"] = header[1] * cfg.tile + (ys - cfg.halo)
+    out["xs"] = header[2] * cfg.tile + (xs - cfg.halo)
+    if spec.describe is not None:
+        desc = spec.describe(tile, ys, xs)
+        out["desc"] = jnp.where(valid[:, None], desc,
+                                jnp.zeros_like(desc))
+    return out
+
+
+def extract_features(bundle_tiles, bundle_headers, algorithm: str,
+                     cfg: DifetConfig, use_pallas: bool = False):
+    """vmapped map over tiles + the reduce: total count and global top-K."""
+    per_tile = jax.vmap(
+        functools.partial(extract_tile, algorithm, cfg,
+                          use_pallas=use_pallas))(
+        bundle_tiles, bundle_headers)
+    # ---- reduce ------------------------------------------------------------
+    total = per_tile["count"].sum()
+    t, k = per_tile["scores"].shape
+    flat_scores = per_tile["scores"].reshape(t * k)
+    flat_valid = per_tile["valid"].reshape(t * k)
+    masked = jnp.where(flat_valid, flat_scores, -jnp.inf)
+    top_scores, idx = jax.lax.top_k(masked, min(k * 4, t * k))
+    gather = lambda a: jnp.take(a.reshape(t * k, *a.shape[2:]), idx, axis=0)
+    result = {
+        "total_count": total,
+        "per_tile_count": per_tile["count"],
+        "top_scores": jnp.where(jnp.isfinite(top_scores), top_scores, 0.0),
+        "top_ys": gather(per_tile["ys"]),
+        "top_xs": gather(per_tile["xs"]),
+        "top_valid": gather(per_tile["valid"]) & jnp.isfinite(top_scores),
+        "keypoint_count": per_tile["valid"].sum(),
+    }
+    if "desc" in per_tile:
+        result["top_desc"] = gather(per_tile["desc"])
+    return result
+
+
+def make_distributed_extractor(algorithm: str, cfg: DifetConfig, mesh,
+                               use_pallas: bool = False):
+    """jit-compiled distributed extractor: tiles sharded over the data axis;
+    the reduce lowers to one all-reduce (counts) + one gather (top-K)."""
+    from repro.distributed.sharding import use_mesh, batch_pspec
+    from jax.sharding import NamedSharding
+
+    tile_sh = NamedSharding(mesh, batch_pspec(mesh, 3))
+    hdr_sh = NamedSharding(mesh, batch_pspec(mesh, 2))
+
+    fn = functools.partial(extract_features, algorithm=algorithm, cfg=cfg,
+                           use_pallas=use_pallas)
+
+    @functools.partial(jax.jit, in_shardings=(tile_sh, hdr_sh))
+    def run(tiles, headers):
+        return fn(tiles, headers)
+
+    return run

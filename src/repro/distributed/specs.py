@@ -1,0 +1,154 @@
+"""Shape/sharding spec builders for the launchers and the dry-run.
+
+Everything here works on ``jax.eval_shape`` abstractions — no device
+allocation — so the full-size configs can be lowered with placeholder
+meshes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import (
+    param_pspec_tree, dp_axes, batch_pspec, _dp_over_model_active,
+)
+
+
+def _data_axes(mesh):
+    dp = dp_axes(mesh)
+    if _dp_over_model_active() and "model" in mesh.axis_names:
+        dp = dp + ("model",)
+    return dp
+
+
+def state_abstract(model, optimizer, step_cfg):
+    """Abstract train state via eval_shape (no allocation)."""
+    from repro.train.step import make_init_fn
+    init_fn = make_init_fn(model, optimizer, step_cfg)
+    return jax.eval_shape(lambda: init_fn(jax.random.PRNGKey(0)))
+
+
+def params_abstract(model):
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def state_pspecs(state_shapes, mesh):
+    """Params + optimizer m/v share the param rules; counters replicated."""
+    param_specs = param_pspec_tree(state_shapes["params"], mesh)
+    out = {"params": param_specs,
+           "opt": {"m": param_specs, "v": param_specs, "count": P()},
+           "step": P()}
+    if "err" in state_shapes:
+        out["err"] = param_specs
+    return out
+
+
+# Per-device replicated-weight budget for serving params.  0 disables the
+# feature (measured: decode collective is KV-gather-dominated, not param
+# gathers, so replication bought nothing — §Perf second-round table).
+SERVING_FSDP_BYTES_THRESHOLD = 0
+
+
+def params_pspecs(params_shapes, mesh, serving: bool = False):
+    """Parameter shardings.  For serving (no optimizer states), weights are
+    replicated over the dp axes when they fit the per-device budget —
+    FSDP-sharded weights would otherwise be all-gathered every decode step
+    (the dominant decode collective, §Perf).  Large models keep FSDP."""
+    specs = param_pspec_tree(params_shapes, mesh)
+    if not serving:
+        return specs
+    model_sz = mesh.shape.get("model", 1)
+    total_bytes = sum(
+        int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
+        for l in jax.tree_util.tree_leaves(params_shapes))
+    if total_bytes / model_sz > SERVING_FSDP_BYTES_THRESHOLD:
+        return specs                      # too big to replicate over dp
+    dp = set(dp_axes(mesh))
+
+    def drop_dp(spec):
+        out = []
+        for ax in tuple(spec):
+            if ax is None:
+                out.append(None)
+            elif isinstance(ax, tuple):
+                kept = tuple(a for a in ax if a not in dp)
+                out.append(kept[0] if len(kept) == 1 else (kept or None))
+            else:
+                out.append(None if ax in dp else ax)
+        return P(*out)
+
+    return jax.tree_util.tree_map(
+        drop_dp, specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_pspecs(batch_shapes, mesh):
+    """Shard the leading (batch) dim of every batch leaf on the dp axes
+    (largest divisible prefix, so dp_over_model degrades gracefully)."""
+    from repro.distributed.sharding import largest_divisible_prefix
+    dp = _data_axes(mesh)
+
+    def f(leaf):
+        if not leaf.shape:
+            return P()
+        ax = largest_divisible_prefix(leaf.shape[0], dp, mesh)
+        return P(ax, *([None] * (len(leaf.shape) - 1)))
+
+    return jax.tree_util.tree_map(f, batch_shapes)
+
+
+def cache_pspecs(cache_shapes, mesh, *, batch_size, max_seq, cfg):
+    """Decode-cache sharding: batch dim on dp when divisible; otherwise the
+    sequence dim (long-context B=1 → sequence-parallel KV).  KV-head dims
+    shard on ``model`` when divisible."""
+    from repro.distributed.sharding import largest_divisible_prefix
+    dp = _data_axes(mesh)
+    model_sz = mesh.shape.get("model", 1)
+
+    def f(leaf):
+        spec = [None] * len(leaf.shape)
+        used_dp = False
+        for i, d in enumerate(leaf.shape):
+            if d == batch_size and not used_dp:
+                ax = largest_divisible_prefix(d, dp, mesh)
+                if ax is not None:
+                    spec[i] = ax
+                    used_dp = True
+                break
+        if not used_dp and max_seq:
+            for i, d in enumerate(leaf.shape):
+                if d == max_seq:
+                    ax = largest_divisible_prefix(d, dp, mesh)
+                    if ax is not None:
+                        spec[i] = ax
+                        used_dp = True
+                    break
+        # second axis: kv-head dim on model when divisible, else the
+        # sequence dim (sequence-parallel KV — ragged head counts)
+        def _has_model(s):
+            return s == "model" or (isinstance(s, tuple) and "model" in s)
+        placed_model = any(_has_model(s) for s in spec)
+        for i, d in enumerate(leaf.shape):
+            if spec[i] is None and d in (cfg.n_kv_heads, cfg.n_heads) \
+                    and i >= 2 and d % model_sz == 0:
+                spec[i] = "model"
+                placed_model = True
+                break
+        # (head-dim sharding was tried here and REFUTED — §Perf: RoPE's
+        # half-split and the flat qkv projections force reshards, 250x the
+        # decode collective vs sequence-sharding.  Sequence it is.)
+        if not placed_model and max_seq:
+            for i, d in enumerate(leaf.shape):
+                if spec[i] is None and d == max_seq and d % model_sz == 0:
+                    spec[i] = "model"
+                    break
+        return P(*spec)
+
+    return jax.tree_util.tree_map(f, cache_shapes)
+
+
+def to_named(tree, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for DIFET's stencil hot-spots.
+
+Each kernel fuses a multi-pass stencil pipeline into one VMEM-resident pass
+(one HBM read + one write per tile), vs. XLA's one-materialization-per-stage
+lowering of the pure-jnp reference.  Kernels are validated in interpret mode
+against ``ref.py`` oracles over shape/dtype sweeps (tests/test_kernels.py).
+"""

@@ -1,0 +1,83 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+Handle host-side reflect padding (so kernel slicing is 'valid'), lane-dim
+alignment to 128 multiples, [H,W] vs [N,H,W] rank, and the interpret-mode
+fallback on CPU (this container validates kernels in interpret mode; on a
+real TPU set ``interpret=False``/default).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pyramid import gaussian_kernel_1d
+from repro.kernels import harris as _harris
+from repro.kernels import blur as _blur
+from repro.kernels import fastscore as _fast
+
+LANE = 128
+
+
+def _interpret_default():
+    return jax.default_backend() != "tpu"
+
+
+def _prep(img, pad: int):
+    """Reflect-pad by ``pad``; align padded W to a LANE multiple (extra
+    right-pad is cropped from the output).  Returns (x [N,Hp,Wp], h, w,
+    squeeze)."""
+    squeeze = img.ndim == 2
+    x = img[None] if squeeze else img
+    n, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)), mode="reflect")
+    extra = (-xp.shape[-1]) % LANE
+    if extra:
+        xp = jnp.pad(xp, ((0, 0), (0, 0), (0, extra)), mode="edge")
+    return xp.astype(jnp.float32), h, w, squeeze
+
+
+def _crop(out, h, w, squeeze):
+    out = out[..., :h, :w]
+    return out[0] if squeeze else out
+
+
+@functools.partial(jax.jit, static_argnames=("k", "sigma", "shi_tomasi",
+                                             "interpret"))
+def harris(img, *, k: float = 0.04, sigma: float = 1.0,
+           shi_tomasi: bool = False, interpret: bool = None):
+    """Fused Harris / Shi-Tomasi response.  img [H,W] or [N,H,W] -> same."""
+    interpret = _interpret_default() if interpret is None else interpret
+    r = max(1, int(np.ceil(3.0 * sigma)))
+    xp, h, w, squeeze = _prep(img, r + 1)
+    wk = xp.shape[-1] - 2 * (r + 1)       # lane-aligned interior width
+    out = _harris.harris_pallas(xp, k=k, sigma=sigma, shi_tomasi=shi_tomasi,
+                                h=h, w=wk, interpret=interpret)
+    return _crop(out, h, w, squeeze)
+
+
+@functools.partial(jax.jit, static_argnames=("sigma", "interpret"))
+def gaussian_blur(img, sigma: float, interpret: bool = None):
+    """Separable Gaussian blur.  img [..., H, W] (leading dims flattened)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    lead = img.shape[:-2]
+    x = img.reshape((-1,) + img.shape[-2:])
+    r = max(1, int(np.ceil(3.0 * sigma)))
+    xp, h, w, _ = _prep(x, r)
+    wk = xp.shape[-1] - 2 * r
+    out = _blur.blur_pallas(xp, sigma=sigma, h=h, w=wk, interpret=interpret)
+    return out[..., :h, :w].reshape(lead + img.shape[-2:])
+
+
+@functools.partial(jax.jit, static_argnames=("threshold", "arc", "interpret"))
+def fast_score(img, *, threshold: float = 0.15, arc: int = 9,
+               interpret: bool = None):
+    """FAST-N corner score.  img [H,W] or [N,H,W] -> same."""
+    interpret = _interpret_default() if interpret is None else interpret
+    xp, h, w, squeeze = _prep(img, 3)
+    wk = xp.shape[-1] - 6
+    out = _fast.fast_pallas(xp, threshold=threshold, arc=arc, h=h, w=wk,
+                            interpret=interpret)
+    return _crop(out, h, w, squeeze)

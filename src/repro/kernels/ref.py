@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These mirror the kernels' exact padding convention (reflect-pad the *image*
+once, then valid-slice) so kernel-vs-ref equality holds at every pixel.
+The production jnp detectors (`repro.core.detectors`) pad per-stage instead;
+the two conventions agree everywhere except a <= (blur_radius+1) border band
+— and DIFET's interior-ownership rule (halo=24) makes that band irrelevant,
+which tests/test_kernels.py asserts explicitly.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pyramid import gaussian_kernel_1d
+
+
+def _pad(img, r):
+    return jnp.pad(img, [(0, 0)] * (img.ndim - 2) + [(r, r), (r, r)],
+                   mode="reflect")
+
+
+def _sobel_valid(x, h, w):
+    sl = lambda dy, dx: x[..., 1 + dy:1 + dy + h, 1 + dx:1 + dx + w]
+    gx = (sl(-1, 1) + 2 * sl(0, 1) + sl(1, 1)
+          - sl(-1, -1) - 2 * sl(0, -1) - sl(1, -1)) / 8.0
+    gy = (sl(1, -1) + 2 * sl(1, 0) + sl(1, 1)
+          - sl(-1, -1) - 2 * sl(-1, 0) - sl(-1, 1)) / 8.0
+    return gx, gy
+
+
+def _blur_valid(x, taps, h, w):
+    r = (len(taps) - 1) // 2
+    tmp = sum(float(taps[j]) * x[..., :, j:j + w] for j in range(2 * r + 1))
+    return sum(float(taps[i]) * tmp[..., i:i + h, :] for i in range(2 * r + 1))
+
+
+def harris(img, *, k: float = 0.04, sigma: float = 1.0,
+           shi_tomasi: bool = False):
+    h, w = img.shape[-2:]
+    taps = gaussian_kernel_1d(float(sigma))
+    r = (len(taps) - 1) // 2
+    x = _pad(img.astype(jnp.float32), r + 1)
+    gx, gy = _sobel_valid(x, h + 2 * r, w + 2 * r)
+    ixx = _blur_valid(gx * gx, taps, h, w)
+    iyy = _blur_valid(gy * gy, taps, h, w)
+    ixy = _blur_valid(gx * gy, taps, h, w)
+    if shi_tomasi:
+        half_tr = 0.5 * (ixx + iyy)
+        rad = jnp.sqrt(jnp.maximum(0.25 * (ixx - iyy) ** 2 + ixy * ixy, 0.0))
+        return half_tr - rad
+    det = ixx * iyy - ixy * ixy
+    tr = ixx + iyy
+    return det - k * tr * tr
+
+
+def gaussian_blur(img, sigma: float):
+    h, w = img.shape[-2:]
+    taps = gaussian_kernel_1d(float(sigma))
+    r = (len(taps) - 1) // 2
+    return _blur_valid(_pad(img.astype(jnp.float32), r), taps, h, w)
+
+
+def fast_score(img, *, threshold: float = 0.15, arc: int = 9):
+    from repro.core.detectors import FAST_OFFSETS
+    h, w = img.shape[-2:]
+    x = _pad(img.astype(jnp.float32), 3)
+    center = x[..., 3:3 + h, 3:3 + w]
+    circ = jnp.stack([x[..., 3 + dy:3 + dy + h, 3 + dx:3 + dx + w]
+                      for dy, dx in FAST_OFFSETS], axis=-3)
+    brighter = circ > center[..., None, :, :] + threshold
+    darker = circ < center[..., None, :, :] - threshold
+
+    def has_arc(flags):
+        hit = jnp.zeros(flags.shape[:-3] + (h, w), jnp.bool_)
+        for start in range(16):
+            run = flags[..., start % 16, :, :]
+            for j in range(1, arc):
+                run = run & flags[..., (start + j) % 16, :, :]
+            hit = hit | run
+        return hit
+
+    is_corner = has_arc(brighter) | has_arc(darker)
+    diff = jnp.abs(circ - center[..., None, :, :]) - threshold
+    score_b = jnp.where(brighter, diff, 0.0).sum(axis=-3)
+    score_d = jnp.where(darker, diff, 0.0).sum(axis=-3)
+    return jnp.where(is_corner, jnp.maximum(score_b, score_d), 0.0)

@@ -1,0 +1,166 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# Must precede all other imports (see dryrun.py).
+
+"""Scan-trip-count correction for the roofline analysis.
+
+``compiled.cost_analysis()`` counts a ``lax.scan`` (while-loop) body ONCE,
+not x trip-count (verified empirically — see EXPERIMENTS.md §Roofline
+methodology).  Since every layer stack here is scanned, per-cell flops/bytes
+/collective-bytes are undercounted by ~the layer count.
+
+Correction: for each (arch, shape, mesh) cell, lower tiny VARIANT configs
+that change each stack's depth by one (e.g. dense LM at n_layers=1 and 2)
+and solve the linear model
+
+    cost(n_1..n_k) = base + sum_i n_i * per_layer_i
+
+then extrapolate to the full depths.  Scan bodies are depth-independent, so
+the model is exact (up to XLA fusion differences between variant and full
+compiles, which are small — the body HLO is identical).
+
+Peak memory is NOT corrected (the scanned executable's memory_analysis is
+already the truth).  Results are written back into the dry-run JSONs under
+``corrected``.
+"""
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import numpy as np   # noqa: E402
+
+from repro.configs import get_config, SHAPES  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.analysis import roofline_terms  # noqa: E402
+
+
+def stack_knobs(cfg):
+    """Returns (knob_names, full_counts, variant_cfg_fn).
+
+    knobs = independent scanned-stack trip counts of this arch.
+    variant_cfg_fn(counts) -> a config with those trip counts.
+    """
+    if cfg.family == "audio":
+        full = (cfg.n_encoder_layers, cfg.n_layers)
+        make = lambda c: cfg.replace(n_encoder_layers=c[0], n_layers=c[1])
+        return ("enc", "dec"), full, make
+    if cfg.moe is not None and cfg.moe.n_dense_layers:
+        nd = cfg.moe.n_dense_layers
+        full = (nd, cfg.n_layers - nd)
+        make = lambda c: cfg.replace(
+            n_layers=c[0] + c[1],
+            moe=dataclasses.replace(cfg.moe, n_dense_layers=c[0]))
+        return ("dense", "moe"), full, make
+    if cfg.xlstm is not None:
+        g = cfg.n_layers // cfg.xlstm.slstm_every
+        full = (g,)
+        make = lambda c: cfg.replace(n_layers=c[0] * cfg.xlstm.slstm_every)
+        return ("super",), full, make
+    if cfg.shared_attn_every:
+        g = cfg.n_layers // cfg.shared_attn_every
+        full = (g,)
+        make = lambda c: cfg.replace(n_layers=c[0] * cfg.shared_attn_every)
+        return ("super",), full, make
+    full = (cfg.n_layers,)
+    return ("layers",), full, lambda c: cfg.replace(n_layers=c[0])
+
+
+def variant_points(n_knobs):
+    """Probe points: all-ones plus one +1 per knob (k+1 lowers)."""
+    pts = [tuple([1] * n_knobs)]
+    for i in range(n_knobs):
+        p = [1] * n_knobs
+        p[i] = 2
+        pts.append(tuple(p))
+    return pts
+
+
+def measure(cfg, shape, mesh):
+    from repro.launch.dryrun import lower_cell
+    from repro.models.analysis_flags import single_chunk
+    with single_chunk():
+        # prefill_chunks=1: lax.map is a while loop (counted once) — the
+        # chunked production numbers are chunk-count x the per-chunk cost,
+        # which equals the unchunked cost measured here.
+        r = lower_cell(cfg.replace(unroll_stacks=True, prefill_chunks=1),
+                       shape, mesh)
+    return np.array([r["cost"]["hlo_flops"], r["cost"]["hlo_bytes"],
+                     r["collective_bytes_total"]], dtype=np.float64)
+
+
+def slstm_addon(cfg, shape, mesh_axes_prod) -> np.ndarray:
+    """sLSTM's time scan is inherently sequential (cannot be single-chunked);
+    its body is counted once instead of S times.  Analytic add-on for the
+    missing (S-1) steps: per step/device ~ 16·B_loc·d² flops (W and R
+    matmuls, fwd), x3 for train (bwd); bytes ~ weight reads 32·d²·4."""
+    if cfg.xlstm is None or shape.is_decode:
+        return np.zeros(3)
+    g = cfg.n_layers // cfg.xlstm.slstm_every
+    d = cfg.d_model
+    b_loc = max(shape.global_batch // mesh_axes_prod, 1)
+    s = shape.seq_len
+    mult = 3.0 if shape.kind == "train" else 1.0
+    flops = g * (s - 1) * mult * 16.0 * b_loc * d * d
+    bytes_ = g * (s - 1) * mult * (32.0 * d * d)
+    return np.array([flops, bytes_, 0.0])
+
+
+def correct_cell(path: Path, force: bool = False):
+    d = json.loads(path.read_text())
+    if "corrected" in d and not force:
+        print(f"[skip] {path.name}")
+        return
+    cfg = get_config(d["arch"])
+    shape = SHAPES[d["shape"]]
+    mesh = make_production_mesh(multi_pod=(d["mesh"].count("x") == 2))
+    knobs, full, make = stack_knobs(cfg)
+    pts = variant_points(len(knobs))
+    print(f"[correct] {path.name}: knobs={knobs} full={full} "
+          f"probes={pts}", flush=True)
+    ys = [measure(make(p), shape, mesh) for p in pts]
+    base_pt = np.array(pts[0], np.float64)
+    y0 = ys[0]
+    per_layer = np.stack([ys[i + 1] - y0 for i in range(len(knobs))])  # [k,3]
+    base = y0 - base_pt @ per_layer
+    fullv = np.array(full, np.float64)
+    corrected = base + fullv @ per_layer
+    corrected = np.maximum(corrected, y0)      # monotone guard
+    dp_total = 32 if d["mesh"].count("x") == 2 else 16
+    corrected = corrected + slstm_addon(cfg, shape, dp_total)
+    flops, hbm, coll = [float(v) for v in corrected]
+    d["corrected"] = {
+        "hlo_flops": flops, "hlo_bytes": hbm, "collective_bytes_total": coll,
+        "per_layer": per_layer.tolist(), "base": base.tolist(),
+        "knobs": list(knobs), "full": list(full),
+        "roofline": roofline_terms(flops, hbm, coll, d["n_chips"]),
+    }
+    d["corrected"]["useful_flops_ratio"] = (
+        d["model_flops"] / (flops * d["n_chips"]) if flops else 0.0)
+    path.write_text(json.dumps(d, indent=1))
+    r = d["corrected"]["roofline"]
+    print(f"  corrected: compute={r['compute_s']:.3e}s "
+          f"mem={r['memory_s']:.3e}s coll={r['collective_s']:.3e}s "
+          f"dom={r['dominant']} frac={r['roofline_fraction']*100:.1f}%",
+          flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--only", default=None, help="substring filter")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    files = sorted(Path(args.dir).glob("*.json"))
+    if args.only:
+        files = [f for f in files if f.name.startswith(args.only)]
+    for f in files:
+        try:
+            correct_cell(f, force=args.force)
+        except Exception as e:  # noqa: BLE001
+            print(f"  FAIL {f.name}: {e!r}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

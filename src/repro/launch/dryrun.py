@@ -1,0 +1,215 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# The two lines above MUST run before any other import (jax locks device
+# count on first init).  This module is the ONLY place the 512 placeholder
+# devices exist — smoke tests and benches see the real single CPU device.
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes, print memory/cost analysis, record roofline inputs.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch internlm2-1.8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+"""
+import argparse     # noqa: E402
+import json         # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax          # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import (  # noqa: E402
+    get_config, all_arch_ids, applicable_shapes, SHAPES)
+from repro.models import build_model  # noqa: E402
+from repro.optim import AdamW  # noqa: E402
+from repro.train.step import make_train_step, TrainStepConfig  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.analysis import (  # noqa: E402
+    parse_collectives, roofline_terms, cost_analysis_terms, model_flops,
+    active_param_count)
+from repro.distributed.sharding import (  # noqa: E402
+    use_mesh, activation_dp_over_model)
+from repro.distributed import specs as SP  # noqa: E402
+from repro.models.model import param_count  # noqa: E402
+
+
+def lower_cell(cfg, shape, mesh, microbatches: int = 1):
+    """Lower + compile one (arch, shape, mesh) cell.  Returns result dict."""
+    model = build_model(cfg)
+    t0 = time.time()
+    import contextlib
+    with use_mesh(mesh), activation_dp_over_model(cfg.dp_over_model):
+        if shape.kind == "train":
+            opt = AdamW()
+            scfg = TrainStepConfig(microbatches=microbatches)
+            step = make_train_step(model, opt, scfg)
+            state_shapes = SP.state_abstract(model, opt, scfg)
+            state_sh = SP.to_named(SP.state_pspecs(state_shapes, mesh), mesh)
+            batch_shapes = model.input_specs(shape)
+            batch_sh = SP.to_named(SP.batch_pspecs(batch_shapes, mesh), mesh)
+            lowered = jax.jit(
+                step,
+                in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, None),
+                donate_argnums=(0,),
+            ).lower(state_shapes, batch_shapes)
+        elif shape.kind == "prefill":
+            params_shapes = SP.params_abstract(model)
+            params_sh = SP.to_named(
+                SP.params_pspecs(params_shapes, mesh, serving=True), mesh)
+            batch_shapes = model.input_specs(shape)
+            batch_sh = SP.to_named(SP.batch_pspecs(batch_shapes, mesh), mesh)
+            out_shapes = jax.eval_shape(model.prefill, params_shapes,
+                                        batch_shapes)
+            cache_sh = SP.to_named(
+                SP.cache_pspecs(out_shapes[1], mesh,
+                                batch_size=shape.global_batch,
+                                max_seq=shape.seq_len, cfg=cfg), mesh)
+            lowered = jax.jit(
+                model.prefill,
+                in_shardings=(params_sh, batch_sh),
+                out_shardings=(None, cache_sh),
+            ).lower(params_shapes, batch_shapes)
+        else:  # decode
+            params_shapes = SP.params_abstract(model)
+            params_sh = SP.to_named(
+                SP.params_pspecs(params_shapes, mesh, serving=True), mesh)
+            b = shape.global_batch
+            cache_shapes = jax.eval_shape(
+                lambda: model.init_cache(b, shape.seq_len))
+            cache_sh = SP.to_named(
+                SP.cache_pspecs(cache_shapes, mesh, batch_size=b,
+                                max_seq=shape.seq_len, cfg=cfg), mesh)
+            tok = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+            pos = jax.ShapeDtypeStruct((), jnp.int32)
+            lowered = jax.jit(
+                model.decode_step,
+                in_shardings=(params_sh, cache_sh, None, None),
+                out_shardings=(None, cache_sh),
+                donate_argnums=(1,),
+            ).lower(params_shapes, cache_shapes, tok, pos)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = cost_analysis_terms(compiled)
+    coll = parse_collectives(compiled.as_text())
+    n_chips = mesh.size
+    terms = roofline_terms(cost["hlo_flops"], cost["hlo_bytes"],
+                           sum(coll.values()), n_chips)
+    n_params = param_count(SP.params_abstract(model))
+    n_active = active_param_count(cfg, n_params)
+    n_tokens = shape.global_batch * (1 if shape.is_decode else shape.seq_len)
+    mflops = model_flops(n_active, n_tokens,
+                         "train" if shape.kind == "train" else "serve")
+    result = {
+        "arch": cfg.arch_id, "shape": shape.name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "n_chips": n_chips,
+        "n_params": n_params,
+        "n_active_params": n_active,
+        "microbatches": microbatches,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_bytes_per_device": (mem.argument_size_in_bytes
+                                      + mem.temp_size_in_bytes),
+        },
+        "cost": cost,
+        "collective_bytes": coll,
+        "collective_bytes_total": sum(coll.values()),
+        "model_flops": mflops,
+        # hlo_flops is per-device; global = x n_chips
+        "useful_flops_ratio": (mflops / (cost["hlo_flops"] * n_chips)
+                               if cost["hlo_flops"] else 0.0),
+        "roofline": terms,
+    }
+    return result
+
+
+# Per-arch gradient-accumulation defaults for train_4k (1M tokens global):
+# sized so activation peak fits HBM after remat (§Perf iterations 2-3).
+TRAIN_MICROBATCHES = {
+    "deepseek-v3-671b": 16, "dbrx-132b": 32, "qwen1.5-110b": 8,
+    "glm4-9b": 8, "internvl2-2b": 8, "whisper-large-v3": 1,
+    "internlm2-1.8b": 2, "smollm-135m": 1, "xlstm-350m": 1,
+    "zamba2-2.7b": 4,
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=0,
+                    help="0 = per-arch default (train shapes)")
+    args = ap.parse_args()
+
+    meshes = []
+    if args.both_meshes:
+        meshes = [make_production_mesh(multi_pod=False),
+                  make_production_mesh(multi_pod=True)]
+    else:
+        meshes = [make_production_mesh(multi_pod=args.multi_pod)]
+
+    cells = []
+    if args.all:
+        for arch in all_arch_ids():
+            cfg = get_config(arch)
+            for sname in applicable_shapes(cfg):
+                cells.append((arch, sname))
+    else:
+        cells = [(args.arch, args.shape)]
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    failures = []
+    for mesh in meshes:
+        mesh_tag = "x".join(str(s) for s in mesh.devices.shape)
+        for arch, sname in cells:
+            cfg = get_config(arch)
+            shape = SHAPES[sname]
+            path = outdir / f"{mesh_tag}__{arch}__{sname}.json"
+            if path.exists() and not args.force:
+                print(f"[skip] {path.name} (cached)")
+                continue
+            print(f"[dryrun] {arch} × {sname} on mesh {mesh_tag} ...",
+                  flush=True)
+            mb = 1
+            if shape.kind == "train":
+                mb = args.microbatches or TRAIN_MICROBATCHES.get(arch, 1)
+            try:
+                res = lower_cell(cfg, shape, mesh, microbatches=mb)
+                path.write_text(json.dumps(res, indent=1))
+                r = res["roofline"]
+                print(f"  ok: compile={res['compile_s']}s "
+                      f"peak/dev={res['memory']['peak_bytes_per_device']/2**30:.2f}GiB "
+                      f"compute={r['compute_s']:.2e}s mem={r['memory_s']:.2e}s "
+                      f"coll={r['collective_s']:.2e}s dom={r['dominant']}",
+                      flush=True)
+            except Exception as e:  # noqa: BLE001 — record and continue
+                failures.append((mesh_tag, arch, sname, repr(e)))
+                print(f"  FAIL: {e!r}", flush=True)
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nAll dry-run cells compiled successfully.")
+
+
+if __name__ == "__main__":
+    main()

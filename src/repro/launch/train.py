@@ -1,0 +1,105 @@
+"""End-to-end LM training driver with checkpoint/restart.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+        --steps 300 --batch 8 --seq 256 [--reduced] [--resume]
+
+On this CPU container use ``--reduced`` (tiny same-family config); on a pod
+the full config + production mesh applies unchanged.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.optim import AdamW, cosine_schedule
+from repro.train.step import make_train_step, make_init_fn, TrainStepConfig
+from repro.checkpoint import CheckpointManager
+from repro.launch.mesh import make_host_mesh
+from repro.distributed.sharding import use_mesh, activation_dp_over_model
+from repro.distributed import specs as SP
+from repro.data.tokens import synthetic_lm_batch
+from repro.models.model import param_count
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    cfg = cfg.replace(remat="nothing" if args.reduced else cfg.remat)
+    model = build_model(cfg)
+    opt = AdamW()
+    scfg = TrainStepConfig(learning_rate=args.lr,
+                           microbatches=args.microbatches,
+                           grad_compression=args.grad_compression)
+    lr_fn = cosine_schedule(args.lr, warmup_steps=20, total_steps=args.steps)
+    step_fn = make_train_step(model, opt, scfg, lr_fn)
+    init_fn = make_init_fn(model, opt, scfg)
+    mesh = make_host_mesh()
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+
+    with use_mesh(mesh), activation_dp_over_model(cfg.dp_over_model):
+        state = jax.jit(init_fn)(jax.random.PRNGKey(0))
+        start = 0
+        if ckpt and args.resume and ckpt.latest_step() is not None:
+            state, start = ckpt.restore(jax.eval_shape(lambda: state))
+            print(f"[resume] restored step {start}")
+        print(f"[train] {cfg.arch_id} reduced={args.reduced} "
+              f"params={param_count(state['params']):,}")
+        jstep = jax.jit(step_fn, donate_argnums=(0,))
+        t0 = time.time()
+        losses = []
+        for i in range(start, args.steps):
+            batch = synthetic_lm_batch(args.batch, args.seq, cfg.vocab_size,
+                                       seed=i)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            if cfg.n_image_patches:
+                batch["patches"] = jnp.zeros(
+                    (args.batch, cfg.n_image_patches, cfg.d_model),
+                    jnp.bfloat16)
+            if cfg.is_enc_dec:
+                batch["frames"] = jnp.zeros(
+                    (args.batch, cfg.encoder_seq_len, cfg.d_model),
+                    jnp.bfloat16)
+            state, metrics = jstep(state, batch)
+            losses.append(float(metrics["loss"]))
+            if i % args.log_every == 0 or i == args.steps - 1:
+                dt = time.time() - t0
+                print(f"step {i:5d} loss {losses[-1]:.4f} "
+                      f"ce {float(metrics['ce']):.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} "
+                      f"({dt:.1f}s)", flush=True)
+            if ckpt and (i + 1) % args.ckpt_every == 0:
+                ckpt.save(state, i + 1, async_=True)
+        if ckpt:
+            ckpt.save(state, args.steps, async_=True)
+            ckpt.wait()
+    first = np.mean(losses[:10]) if len(losses) >= 10 else losses[0]
+    last = np.mean(losses[-10:])
+    print(f"[done] loss {first:.4f} -> {last:.4f} "
+          f"({'improved' if last < first else 'NOT improved'})")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

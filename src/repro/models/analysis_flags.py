@@ -1,0 +1,28 @@
+"""Analysis-mode flags.
+
+``single_chunk()``: makes every *time-axis* chunked scan (online-softmax
+attention, SSD chunks, mLSTM chunks) use one chunk spanning the whole
+sequence, so XLA's counted-once while-loop body equals the true cost.  Used
+only by the roofline correction pass (launch/correction.py) — never in a
+production trace, where chunking is the memory-boundedness win.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+_state = threading.local()
+
+
+def single_chunk_active() -> bool:
+    return getattr(_state, "single_chunk", False)
+
+
+@contextlib.contextmanager
+def single_chunk():
+    prev = getattr(_state, "single_chunk", False)
+    _state.single_chunk = True
+    try:
+        yield
+    finally:
+        _state.single_chunk = prev

@@ -1,0 +1,343 @@
+"""Attention variants: GQA (with optional QKV bias), MLA (DeepSeek-V3),
+cross-attention, and KV-cache decode paths.
+
+Two attention algorithms are provided:
+
+* ``attention_einsum`` — materializes the [B,H,S,S] score matrix.  Fine for
+  short sequences; memory term blows up past ~8k.
+* ``attention_online`` — FlashAttention-style online-softmax over KV chunks
+  via ``lax.scan``.  O(S · chunk) live memory instead of O(S²); this is the
+  default for long sequences (a beyond-paper optimization recorded in
+  EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.models import layers as L
+
+NEG_INF = -1e30
+# §Perf iter (smollm train_4k): einsum attention at S=4096 materialized
+# [B,H,S,S] fp32 scores -> 9.6 GiB/dev; online-softmax from 4096 up removes
+# them (memory term 12.8 s -> see EXPERIMENTS.md).  Below 4096 the score
+# matrix is small enough that XLA's fusion wins.
+ONLINE_ATTN_MIN_SEQ = 4096   # use online-softmax attention at/above this length
+
+
+# ---------------------------------------------------------------------------
+# core attention algorithms
+# ---------------------------------------------------------------------------
+def _expand_kv(k, n_rep):
+    """[B,S,KVH,hd] -> [B,S,KVH*n_rep,hd] by head repetition (GQA)."""
+    if n_rep == 1:
+        return k
+    b, s, kvh, hd = k.shape
+    k = jnp.broadcast_to(k[:, :, :, None, :], (b, s, kvh, n_rep, hd))
+    return k.reshape(b, s, kvh * n_rep, hd)
+
+
+def attention_einsum(q, k, v, *, causal, q_offset=0):
+    """q: [B,Sq,H,hd]; k,v: [B,Sk,H,hd].  Returns [B,Sq,H,hd]."""
+    hd = q.shape[-1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / np.sqrt(hd)
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        qpos = jnp.arange(sq)[:, None] + q_offset
+        kpos = jnp.arange(sk)[None, :]
+        scores = jnp.where(qpos >= kpos, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)
+
+
+def attention_online(q, k, v, *, causal, q_offset=0, chunk=1024,
+                     unroll=False):
+    """Online-softmax attention, scanning KV in chunks.
+
+    Never materializes the full score matrix; peak live memory is
+    O(B·H·Sq·hd) for the accumulator plus one [B,H,Sq,chunk] score block.
+    ``unroll`` unrolls the chunk scan (analysis mode: cost_analysis counts
+    while-loop bodies once — launch/correction.py).
+    """
+    b, sq, h, hd = q.shape
+    hd_v = v.shape[-1]                 # may differ from q/k (MLA)
+    sk = k.shape[1]
+    if sk % chunk != 0:
+        # fall back to a chunk that divides (power-of-two shapes in practice)
+        chunk = int(np.gcd(sk, chunk)) or sk
+    n_chunks = sk // chunk
+    qf = q.astype(jnp.float32) / np.sqrt(hd)
+    kc = k.reshape(b, n_chunks, chunk, h, hd)
+    vc = v.reshape(b, n_chunks, chunk, h, hd_v)
+    kc = jnp.moveaxis(kc, 1, 0)    # [n, B, chunk, H, hd]
+    vc = jnp.moveaxis(vc, 1, 0)
+    qpos = jnp.arange(sq)[:, None] + q_offset
+
+    def body(carry, xs):
+        acc, m, l, i = carry
+        kb, vb = xs
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kb.astype(jnp.float32))
+        if causal:
+            kpos = i * chunk + jnp.arange(chunk)[None, :]
+            s = jnp.where((qpos >= kpos)[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        scale = jnp.exp(m - m_new)
+        l_new = l * scale + p.sum(axis=-1)
+        pv = jnp.einsum("bhqk,bkhd->bhqd", p, vb.astype(jnp.float32))
+        acc_new = acc * scale[..., None] + pv
+        return (acc_new, m_new, l_new, i + 1), None
+
+    acc0 = jnp.zeros((b, h, sq, hd_v), jnp.float32)
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    (acc, m, l, _), _ = lax.scan(body, (acc0, m0, l0, jnp.int32(0)),
+                                 (kc, vc), unroll=n_chunks if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)    # [B,Sq,H,hd]
+
+
+def attention(q, k, v, *, causal, q_offset=0):
+    from repro.models.analysis_flags import single_chunk_active
+    if k.shape[1] >= ONLINE_ATTN_MIN_SEQ:
+        # analysis mode unrolls the chunk scan so cost_analysis sees every
+        # chunk, while keeping the SAME algorithm/memory pattern as prod
+        return attention_online(q, k, v, causal=causal, q_offset=q_offset,
+                                unroll=single_chunk_active())
+    return attention_einsum(q, k, v, causal=causal, q_offset=q_offset)
+
+
+def decode_attention(q, k_cache, v_cache, pos):
+    """Single-token decode: q [B,1,H,hd] vs cache [B,Smax,KVH,hd].
+
+    Positions > ``pos`` are masked (cache may be partially filled).
+    """
+    b, smax, kvh, hd = k_cache.shape
+    h = q.shape[2]
+    k = _expand_kv(k_cache, h // kvh)
+    v = _expand_kv(v_cache, h // kvh)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) / np.sqrt(hd),
+                   k.astype(jnp.float32))
+    valid = (jnp.arange(smax) <= pos)[None, None, None, :]
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA projection block
+# ---------------------------------------------------------------------------
+def gqa_init(key, cfg, dtype=jnp.bfloat16):
+    hd = cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": L.dense_init(kq, cfg.d_model, cfg.n_heads * hd, dtype),
+        "wk": L.dense_init(kk, cfg.d_model, cfg.n_kv_heads * hd, dtype),
+        "wv": L.dense_init(kv, cfg.d_model, cfg.n_kv_heads * hd, dtype),
+        "wo": L.dense_init(ko, cfg.n_heads * hd, cfg.d_model, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+    return p
+
+
+def gqa_project_qkv(p, cfg, x, positions):
+    """Returns q [B,S,H,hd], k/v [B,S,KVH,hd], with RoPE applied if enabled."""
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = L.matmul(x, p["wq"])
+    k = L.matmul(x, p["wk"])
+    v = L.matmul(x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    k = k.reshape(b, s, cfg.n_kv_heads, hd)
+    v = v.reshape(b, s, cfg.n_kv_heads, hd)
+    if cfg.rope_theta:
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_attention(p, cfg, x, positions, *, causal=True):
+    """Full-sequence GQA self-attention (train / prefill)."""
+    q, k, v = gqa_project_qkv(p, cfg, x, positions)
+    k = _expand_kv(k, cfg.n_heads // cfg.n_kv_heads)
+    v = _expand_kv(v, cfg.n_heads // cfg.n_kv_heads)
+    o = attention(q, k, v, causal=causal)
+    return L.matmul(o.reshape(*x.shape[:2], -1), p["wo"])
+
+
+def gqa_prefill(p, cfg, x, positions):
+    """Prefill: attention output plus the K/V tensors for cache population."""
+    q, k, v = gqa_project_qkv(p, cfg, x, positions)
+    ke = _expand_kv(k, cfg.n_heads // cfg.n_kv_heads)
+    ve = _expand_kv(v, cfg.n_heads // cfg.n_kv_heads)
+    o = attention(q, ke, ve, causal=True)
+    return L.matmul(o.reshape(*x.shape[:2], -1), p["wo"]), k, v
+
+
+def gqa_decode(p, cfg, x, k_cache, v_cache, pos):
+    """x: [B,1,D]. Updates cache at ``pos``; returns (out, k_cache, v_cache)."""
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    q = L.matmul(x, p["wq"])
+    k = L.matmul(x, p["wk"])
+    v = L.matmul(x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, 1, cfg.n_heads, hd)
+    k = k.reshape(b, 1, cfg.n_kv_heads, hd)
+    v = v.reshape(b, 1, cfg.n_kv_heads, hd)
+    if cfg.rope_theta:
+        posv = jnp.full((b, 1), pos)
+        q = L.apply_rope(q, posv, cfg.rope_theta)
+        k = L.apply_rope(k, posv, cfg.rope_theta)
+    k_cache = lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype),
+                                       (0, pos, 0, 0))
+    v_cache = lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype),
+                                       (0, pos, 0, 0))
+    o = decode_attention(q, k_cache, v_cache, pos)
+    out = L.matmul(o.reshape(b, 1, -1), p["wo"])
+    return out, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# cross-attention (whisper decoder)
+# ---------------------------------------------------------------------------
+def cross_attn_init(key, cfg, dtype=jnp.bfloat16):
+    hd = cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": L.dense_init(kq, cfg.d_model, cfg.n_heads * hd, dtype),
+        "wk": L.dense_init(kk, cfg.d_model, cfg.n_heads * hd, dtype),
+        "wv": L.dense_init(kv, cfg.d_model, cfg.n_heads * hd, dtype),
+        "wo": L.dense_init(ko, cfg.n_heads * hd, cfg.d_model, dtype),
+    }
+
+
+def cross_attention(p, cfg, x, enc_out):
+    b, s, _ = x.shape
+    se = enc_out.shape[1]
+    hd = cfg.resolved_head_dim
+    q = L.matmul(x, p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = L.matmul(enc_out, p["wk"]).reshape(b, se, cfg.n_heads, hd)
+    v = L.matmul(enc_out, p["wv"]).reshape(b, se, cfg.n_heads, hd)
+    o = attention(q, k, v, causal=False)
+    return L.matmul(o.reshape(b, s, -1), p["wo"])
+
+
+def cross_attention_cached(p, cfg, x, k, v):
+    """Decode-time cross attention against a precomputed (frozen) K/V."""
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = L.matmul(x, p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    o = attention(q, k, v, causal=False)
+    return L.matmul(o.reshape(b, s, -1), p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# MLA — DeepSeek-V3 Multi-head Latent Attention
+# ---------------------------------------------------------------------------
+def mla_init(key, cfg, dtype=jnp.bfloat16):
+    m = cfg.mla
+    d = cfg.d_model
+    h = cfg.n_heads
+    ks = jax.random.split(key, 8)
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wdq": L.dense_init(ks[0], d, m.q_lora_rank, dtype),
+        "q_norm": L.rmsnorm_init(m.q_lora_rank),
+        "wuq": L.dense_init(ks[1], m.q_lora_rank, h * qk_head, dtype),
+        "wdkv": L.dense_init(ks[2], d, m.kv_lora_rank, dtype),
+        "kv_norm": L.rmsnorm_init(m.kv_lora_rank),
+        "wuk": L.dense_init(ks[3], m.kv_lora_rank, h * m.qk_nope_head_dim, dtype),
+        "wuv": L.dense_init(ks[4], m.kv_lora_rank, h * m.v_head_dim, dtype),
+        "wkr": L.dense_init(ks[5], d, m.qk_rope_head_dim, dtype),
+        "wo": L.dense_init(ks[6], h * m.v_head_dim, d, dtype),
+    }
+
+
+def _mla_q(p, cfg, x, positions):
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    cq = L.rmsnorm(p["q_norm"], L.matmul(x, p["wdq"]), cfg.norm_eps)
+    q = L.matmul(cq, p["wuq"]).reshape(b, s, h, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope = q[..., :m.qk_nope_head_dim]
+    q_rope = L.apply_rope(q[..., m.qk_nope_head_dim:], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(p, cfg, x, positions):
+    """Compressed KV latent c_kv [B,S,r] and shared rope key [B,S,rope_d]."""
+    m = cfg.mla
+    c_kv = L.rmsnorm(p["kv_norm"], L.matmul(x, p["wdkv"]), cfg.norm_eps)
+    k_rope = L.matmul(x, p["wkr"])[:, :, None, :]          # [B,S,1,rope_d]
+    k_rope = L.apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def mla_attention(p, cfg, x, positions, *, causal=True):
+    """Naive (expanded) MLA for train/prefill: decompress K/V per position."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    c_kv, k_rope = _mla_latent(p, cfg, x, positions)
+    k_nope = L.matmul(c_kv, p["wuk"]).reshape(b, s, h, m.qk_nope_head_dim)
+    v = L.matmul(c_kv, p["wuv"]).reshape(b, s, h, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (b, s, h, m.qk_rope_head_dim))], axis=-1)
+    o = attention(q, k, v, causal=causal)
+    return L.matmul(o.reshape(b, s, -1), p["wo"]), c_kv, k_rope
+
+
+def mla_decode_absorbed(p, cfg, x, ckv_cache, krope_cache, pos):
+    """Weight-absorbed MLA decode: attention runs in the latent space.
+
+    ``wuk`` is absorbed into the query (q_nope @ wuk^T per head) and ``wuv``
+    into the output projection, so the KV cache stays compressed at
+    [B,S,kv_lora_rank] + [B,S,rope_d] — the whole point of MLA.
+    """
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.n_heads
+    posv = jnp.full((b, 1), pos)
+    q_nope, q_rope = _mla_q(p, cfg, x, posv)               # [B,1,H,*]
+    c_kv, k_rope = _mla_latent(p, cfg, x, posv)            # [B,1,r], [B,1,rd]
+    ckv_cache = lax.dynamic_update_slice(
+        ckv_cache, c_kv.astype(ckv_cache.dtype), (0, pos, 0))
+    krope_cache = lax.dynamic_update_slice(
+        krope_cache, k_rope.astype(krope_cache.dtype), (0, pos, 0))
+    # absorb W_uk: q_lat[b,1,h,r] = q_nope[b,1,h,n] @ W_uk[r, h, n]^T
+    wuk = p["wuk"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
+    q_lat = jnp.einsum("bqhn,rhn->bqhr", q_nope, wuk,
+                       preferred_element_type=jnp.float32)
+    # scores in latent space + shared rope channel
+    scale = 1.0 / np.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    s_lat = jnp.einsum("bqhr,bkr->bhqk", q_lat.astype(jnp.float32),
+                       ckv_cache.astype(jnp.float32))
+    s_rope = jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32),
+                        krope_cache.astype(jnp.float32))
+    s = (s_lat + s_rope) * scale
+    smax = ckv_cache.shape[1]
+    valid = (jnp.arange(smax) <= pos)[None, None, None, :]
+    probs = jax.nn.softmax(jnp.where(valid, s, NEG_INF), axis=-1)
+    # attend in latent space, then decompress through absorbed W_uv
+    o_lat = jnp.einsum("bhqk,bkr->bqhr", probs,
+                       ckv_cache.astype(jnp.float32))      # [B,1,H,r]
+    wuv = p["wuv"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    o = jnp.einsum("bqhr,rhv->bqhv", o_lat, wuv,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    return L.matmul(o.reshape(b, 1, -1), p["wo"]), ckv_cache, krope_cache

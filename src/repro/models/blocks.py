@@ -1,0 +1,426 @@
+"""Per-family blocks and scan-over-layers stacks.
+
+Homogeneous layer stacks are *stacked* along a leading axis and executed with
+``lax.scan`` so HLO size is O(1) in depth — compile-time critical for the
+80-layer and 61-layer assigned archs.  Heterogeneous patterns (xLSTM's
+mLSTM/sLSTM interleave, Zamba2's shared-attention insertions, DeepSeek's
+dense→MoE split) are expressed as scans over homogeneous *super-layers*.
+
+Remat policy (config ``remat``): 'nothing' | 'dots' | 'full' wraps the scan
+body in ``jax.checkpoint`` for training.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.distributed.sharding import shard_activation
+
+
+def _maybe_remat(fn, remat: str):
+    if remat == "nothing":
+        return fn
+    if remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)          # 'full'
+
+
+def stack_fold(body, carry, xs, unroll: bool):
+    """lax.scan, or an unrolled python loop in analysis mode (so XLA's
+    cost_analysis sees every layer — see launch/correction.py)."""
+    if not unroll:
+        return lax.scan(body, carry, xs)
+    n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        x_i = jax.tree_util.tree_map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def stack_init(layer_init, key, n, *args):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: layer_init(k, *args))(keys)
+
+
+# ===========================================================================
+# decoder block: (GQA | MLA) attention + (SwiGLU | MoE) FFN, pre-RMSNorm
+# ===========================================================================
+def decoder_block_init(key, cfg, *, use_moe=False, dtype=jnp.bfloat16):
+    k1, k2 = jax.random.split(key)
+    attn = (A.mla_init(k1, cfg, dtype) if cfg.mla is not None
+            else A.gqa_init(k1, cfg, dtype))
+    p = {"ln1": L.rmsnorm_init(cfg.d_model), "attn": attn,
+         "ln2": L.rmsnorm_init(cfg.d_model)}
+    if use_moe:
+        p["moe"] = M.moe_init(k2, cfg, dtype)
+    else:
+        p["mlp"] = L.swiglu_init(k2, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def decoder_block(p, cfg, h, positions, *, causal=True):
+    """Returns (h, aux_loss)."""
+    hn = L.rmsnorm(p["ln1"], h, cfg.norm_eps)
+    if cfg.mla is not None:
+        a, _, _ = A.mla_attention(p["attn"], cfg, hn, positions, causal=causal)
+    else:
+        a = A.gqa_attention(p["attn"], cfg, hn, positions, causal=causal)
+    h = h + a
+    h = shard_activation(h, "hidden")
+    hn = L.rmsnorm(p["ln2"], h, cfg.norm_eps)
+    if "moe" in p:
+        f, aux = M.moe_apply(p["moe"], cfg, hn)
+    else:
+        f, aux = L.swiglu(p["mlp"], hn), jnp.float32(0.0)
+    h = h + f
+    return shard_activation(h, "hidden"), aux
+
+
+def decoder_block_decode(p, cfg, h, cache, pos):
+    """Single-token decode.  cache: dict of per-layer cache tensors."""
+    hn = L.rmsnorm(p["ln1"], h, cfg.norm_eps)
+    if cfg.mla is not None:
+        a, ckv, kr = A.mla_decode_absorbed(p["attn"], cfg, hn,
+                                           cache["ckv"], cache["krope"], pos)
+        new_cache = {"ckv": ckv, "krope": kr}
+    else:
+        a, kc, vc = A.gqa_decode(p["attn"], cfg, hn,
+                                 cache["k"], cache["v"], pos)
+        new_cache = {"k": kc, "v": vc}
+    h = h + a
+    hn = L.rmsnorm(p["ln2"], h, cfg.norm_eps)
+    if "moe" in p:
+        f, _ = M.moe_apply(p["moe"], cfg, hn)
+    else:
+        f = L.swiglu(p["mlp"], hn)
+    return h + f, new_cache
+
+
+def decoder_block_prefill(p, cfg, h, positions):
+    """Full-seq forward that also emits this layer's KV for cache population."""
+    hn = L.rmsnorm(p["ln1"], h, cfg.norm_eps)
+    if cfg.mla is not None:
+        a, ckv, krope = A.mla_attention(p["attn"], cfg, hn, positions,
+                                        causal=True)
+        kv = {"ckv": ckv, "krope": krope}
+    else:
+        a, k, v = A.gqa_prefill(p["attn"], cfg, hn, positions)
+        kv = {"k": k, "v": v}
+    h = h + a
+    hn = L.rmsnorm(p["ln2"], h, cfg.norm_eps)
+    if "moe" in p:
+        f, _ = M.moe_apply(p["moe"], cfg, hn)
+    else:
+        f = L.swiglu(p["mlp"], hn)
+    return h + f, kv
+
+
+def decoder_stack(params, cfg, h, positions, *, causal=True, remat="dots"):
+    """Scan a stacked decoder-block tree over h.  Returns (h, aux_sum)."""
+    def body(carry, p_layer):
+        h, aux = carry
+        h2, a = decoder_block(p_layer, cfg, h, positions, causal=causal)
+        return (h2, aux + a), None
+
+    body = _maybe_remat(body, remat)
+    (h, aux), _ = stack_fold(body, (h, jnp.float32(0.0)), params,
+                             cfg.unroll_stacks)
+    return h, aux
+
+
+def decoder_stack_decode(params, cfg, h, caches, pos):
+    def body(h, xs):
+        p_layer, cache = xs
+        h, new_cache = decoder_block_decode(p_layer, cfg, h, cache, pos)
+        return h, new_cache
+
+    h, new_caches = stack_fold(body, h, (params, caches),
+                               cfg.unroll_stacks)
+    return h, new_caches
+
+
+def decoder_stack_prefill(params, cfg, h, positions):
+    def body(h, p_layer):
+        h, kv = decoder_block_prefill(p_layer, cfg, h, positions)
+        return h, kv
+
+    return stack_fold(body, h, params, cfg.unroll_stacks)
+
+
+# ===========================================================================
+# whisper encoder block (bidirectional, LayerNorm + GELU MLP)
+# ===========================================================================
+def encoder_block_init(key, cfg, dtype=jnp.bfloat16):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.layernorm_init(cfg.d_model),
+        "attn": A.gqa_init(k1, cfg, dtype),
+        "ln2": L.layernorm_init(cfg.d_model),
+        "mlp": L.gelu_mlp_init(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def encoder_block(p, cfg, h, positions):
+    hn = L.layernorm(p["ln1"], h, cfg.norm_eps)
+    h = h + A.gqa_attention(p["attn"], cfg, hn, positions, causal=False)
+    hn = L.layernorm(p["ln2"], h, cfg.norm_eps)
+    h = h + L.gelu_mlp(p["mlp"], hn)
+    return shard_activation(h, "hidden")
+
+
+def encoder_stack(params, cfg, h, positions, remat="dots"):
+    def body(h, p_layer):
+        return encoder_block(p_layer, cfg, h, positions), None
+
+    body = _maybe_remat(body, remat)
+    h, _ = stack_fold(body, h, params, cfg.unroll_stacks)
+    return h
+
+
+# ===========================================================================
+# whisper decoder block (causal self-attn + cross-attn + GELU MLP)
+# ===========================================================================
+def xdec_block_init(key, cfg, dtype=jnp.bfloat16):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": L.layernorm_init(cfg.d_model),
+        "attn": A.gqa_init(k1, cfg, dtype),
+        "ln_x": L.layernorm_init(cfg.d_model),
+        "xattn": A.cross_attn_init(k2, cfg, dtype),
+        "ln2": L.layernorm_init(cfg.d_model),
+        "mlp": L.gelu_mlp_init(k3, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def xdec_block(p, cfg, h, enc_out, positions):
+    hn = L.layernorm(p["ln1"], h, cfg.norm_eps)
+    h = h + A.gqa_attention(p["attn"], cfg, hn, positions, causal=True)
+    hn = L.layernorm(p["ln_x"], h, cfg.norm_eps)
+    h = h + A.cross_attention(p["xattn"], cfg, hn, enc_out)
+    hn = L.layernorm(p["ln2"], h, cfg.norm_eps)
+    h = h + L.gelu_mlp(p["mlp"], hn)
+    return shard_activation(h, "hidden")
+
+
+def xdec_stack(params, cfg, h, enc_out, positions, remat="dots"):
+    def body(h, p_layer):
+        return xdec_block(p_layer, cfg, h, enc_out, positions), None
+
+    body = _maybe_remat(body, remat)
+    h, _ = stack_fold(body, h, params, cfg.unroll_stacks)
+    return h
+
+
+def xdec_block_decode(p, cfg, h, cache, pos):
+    """cache: {'k','v' (self), 'xk','xv' (frozen cross)}."""
+    b = h.shape[0]
+    hn = L.layernorm(p["ln1"], h, cfg.norm_eps)
+    a, kc, vc = A.gqa_decode(p["attn"], cfg, hn, cache["k"], cache["v"], pos)
+    h = h + a
+    hn = L.layernorm(p["ln_x"], h, cfg.norm_eps)
+    h = h + A.cross_attention_cached(p["xattn"], cfg, hn,
+                                     cache["xk"], cache["xv"])
+    hn = L.layernorm(p["ln2"], h, cfg.norm_eps)
+    h = h + L.gelu_mlp(p["mlp"], hn)
+    return h, {"k": kc, "v": vc, "xk": cache["xk"], "xv": cache["xv"]}
+
+
+def xdec_stack_decode(params, cfg, h, caches, pos):
+    def body(h, xs):
+        p_layer, cache = xs
+        h, new_cache = xdec_block_decode(p_layer, cfg, h, cache, pos)
+        return h, new_cache
+
+    return stack_fold(body, h, (params, caches), cfg.unroll_stacks)
+
+
+def xdec_cross_kv(params, cfg, enc_out):
+    """Precompute frozen cross-attention K/V for every decoder layer."""
+    b, se, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+
+    def one(p_layer):
+        k = L.matmul(enc_out, p_layer["xattn"]["wk"]).reshape(
+            b, se, cfg.n_heads, hd)
+        v = L.matmul(enc_out, p_layer["xattn"]["wv"]).reshape(
+            b, se, cfg.n_heads, hd)
+        return k, v
+
+    return jax.vmap(one)(params)      # ([L,B,Se,H,hd], [L,B,Se,H,hd])
+
+
+# ===========================================================================
+# xLSTM super-layer: (slstm_every - 1) mLSTM blocks + 1 sLSTM block
+# ===========================================================================
+def xlstm_super_init(key, cfg, dtype=jnp.bfloat16):
+    n_m = cfg.xlstm.slstm_every - 1
+    k1, k2 = jax.random.split(key)
+    return {
+        "mlstm": stack_init(lambda k: S.mlstm_init(k, cfg, dtype), k1,
+                            max(n_m, 1)),
+        "slstm": S.slstm_init(k2, cfg, dtype),
+    }
+
+
+def xlstm_super(p, cfg, h):
+    def m_body(h, pm):
+        hn = L.rmsnorm(pm["norm"], h, cfg.norm_eps)
+        return h + S.mlstm_apply(pm, cfg, hn), None
+
+    h, _ = stack_fold(m_body, h, p["mlstm"], cfg.unroll_stacks)
+    hn = L.rmsnorm(p["slstm"]["norm"], h, cfg.norm_eps)
+    h = h + S.slstm_apply(p["slstm"], cfg, hn)
+    return shard_activation(h, "hidden")
+
+
+def xlstm_stack(params, cfg, h, remat="dots"):
+    def body(h, p_super):
+        return xlstm_super(p_super, cfg, h), None
+
+    body = _maybe_remat(body, remat)
+    h, _ = stack_fold(body, h, params, cfg.unroll_stacks)
+    return h
+
+
+def xlstm_super_decode(p, cfg, h, state):
+    def m_body(h, xs):
+        pm, st = xs
+        hn = L.rmsnorm(pm["norm"], h, cfg.norm_eps)
+        d, st = S.mlstm_decode(pm, cfg, hn, st)
+        return h + d, st
+
+    h, m_states = stack_fold(m_body, h, (p["mlstm"], state["mlstm"]),
+                             cfg.unroll_stacks)
+    hn = L.rmsnorm(p["slstm"]["norm"], h, cfg.norm_eps)
+    d, s_state = S.slstm_decode(p["slstm"], cfg, hn, state["slstm"])
+    return h + d, {"mlstm": m_states, "slstm": s_state}
+
+
+def xlstm_stack_decode(params, cfg, h, states):
+    def body(h, xs):
+        p_super, st = xs
+        return xlstm_super_decode(p_super, cfg, h, st)
+
+    return stack_fold(body, h, (params, states), cfg.unroll_stacks)
+
+
+# ===========================================================================
+# Zamba2 super-layer: k Mamba2 blocks + one *shared* attention block
+# ===========================================================================
+def zamba_shared_init(key, cfg, dtype=jnp.bfloat16):
+    """Shared attention+MLP block over concat(h, h_emb0) (Zamba design)."""
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "ln": L.rmsnorm_init(2 * d),
+        "wq": L.dense_init(ks[0], 2 * d, cfg.n_heads * hd, dtype),
+        "wk": L.dense_init(ks[1], 2 * d, cfg.n_kv_heads * hd, dtype),
+        "wv": L.dense_init(ks[2], 2 * d, cfg.n_kv_heads * hd, dtype),
+        "wo": L.dense_init(ks[3], cfg.n_heads * hd, d, dtype),
+        "ln2": L.rmsnorm_init(d),
+        "mlp": L.swiglu_init(ks[4], d, cfg.d_ff, dtype),
+    }
+
+
+def _zamba_shared_qkv(p, cfg, hcat, positions):
+    b, s, _ = hcat.shape
+    hd = cfg.resolved_head_dim
+    q = L.matmul(hcat, p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = L.matmul(hcat, p["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+    v = L.matmul(hcat, p["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def zamba_shared_apply(p, cfg, h, emb0, positions):
+    hcat = L.rmsnorm(p["ln"], jnp.concatenate([h, emb0], axis=-1),
+                     cfg.norm_eps)
+    q, k, v = _zamba_shared_qkv(p, cfg, hcat, positions)
+    k = A._expand_kv(k, cfg.n_heads // cfg.n_kv_heads)
+    v = A._expand_kv(v, cfg.n_heads // cfg.n_kv_heads)
+    o = A.attention(q, k, v, causal=True)
+    h = h + L.matmul(o.reshape(*h.shape[:2], -1), p["wo"])
+    hn = L.rmsnorm(p["ln2"], h, cfg.norm_eps)
+    return h + L.swiglu(p["mlp"], hn)
+
+
+def zamba_shared_decode(p, cfg, h, emb0, k_cache, v_cache, pos):
+    b = h.shape[0]
+    hcat = L.rmsnorm(p["ln"], jnp.concatenate([h, emb0], axis=-1),
+                     cfg.norm_eps)
+    posv = jnp.full((b, 1), pos)
+    q, k, v = _zamba_shared_qkv(p, cfg, hcat, posv)
+    k_cache = lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype),
+                                       (0, pos, 0, 0))
+    v_cache = lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype),
+                                       (0, pos, 0, 0))
+    o = A.decode_attention(q, k_cache, v_cache, pos)
+    h = h + L.matmul(o.reshape(b, 1, -1), p["wo"])
+    hn = L.rmsnorm(p["ln2"], h, cfg.norm_eps)
+    return h + L.swiglu(p["mlp"], hn), k_cache, v_cache
+
+
+def zamba_super_init(key, cfg, dtype=jnp.bfloat16):
+    return {
+        "mamba": stack_init(
+            lambda k: {"norm": L.rmsnorm_init(cfg.d_model),
+                       **{"m": S.mamba2_init(k, cfg, dtype)}},
+            key, cfg.shared_attn_every),
+    }
+
+
+def zamba_super(p, cfg, h, shared, emb0, positions):
+    def m_body(h, pm):
+        hn = L.rmsnorm(pm["norm"], h, cfg.norm_eps)
+        return h + S.mamba2_apply(pm["m"], cfg, hn), None
+
+    h, _ = stack_fold(m_body, h, p["mamba"], cfg.unroll_stacks)
+    h = zamba_shared_apply(shared, cfg, h, emb0, positions)
+    return shard_activation(h, "hidden")
+
+
+def zamba_stack(params, cfg, h, shared, emb0, positions, remat="dots"):
+    def body(h, p_super):
+        return zamba_super(p_super, cfg, h, shared, emb0, positions), None
+
+    body = _maybe_remat(body, remat)
+    h, _ = stack_fold(body, h, params, cfg.unroll_stacks)
+    return h
+
+
+def zamba_super_decode(p, cfg, h, shared, emb0, state, pos):
+    def m_body(h, xs):
+        pm, st = xs
+        hn = L.rmsnorm(pm["norm"], h, cfg.norm_eps)
+        d, st = S.mamba2_decode(pm["m"], cfg, hn, st)
+        return h + d, st
+
+    h, m_states = stack_fold(m_body, h, (p["mamba"], state["mamba"]),
+                             cfg.unroll_stacks)
+    h, kc, vc = zamba_shared_decode(shared, cfg, h, emb0,
+                                    state["k"], state["v"], pos)
+    return h, {"mamba": m_states, "k": kc, "v": vc}
+
+
+def zamba_stack_decode(params, cfg, h, shared, emb0, states, pos):
+    def body(h, xs):
+        p_super, st = xs
+        return zamba_super_decode(p_super, cfg, h, shared, emb0, st, pos)
+
+    return stack_fold(body, h, (params, states), cfg.unroll_stacks)

@@ -1,0 +1,141 @@
+"""Primitive layers: norms, projections, RoPE, MLPs, embeddings.
+
+Params are plain pytrees (nested dicts of jnp arrays).  Compute runs in the
+config dtype (bf16 by default) with fp32 accumulation on every matmul via
+``preferred_element_type``; norms and softmax run in fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def truncated_normal(key, shape, scale, dtype=jnp.float32):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def dense_init(key, d_in, d_out, dtype=jnp.bfloat16):
+    """Fan-in scaled init for a [d_in, d_out] projection."""
+    return truncated_normal(key, (d_in, d_out), 1.0 / np.sqrt(d_in), dtype)
+
+
+def matmul(x, w):
+    """x @ w with fp32 accumulation, result in x.dtype."""
+    return jnp.einsum("...d,df->...f", x, w,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rmsnorm_init(d):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+def layernorm_init(d):
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim, theta):
+    exponent = np.arange(0, head_dim, 2, dtype=np.float32) / head_dim
+    return 1.0 / (theta ** exponent)          # [head_dim//2]
+
+
+def apply_rope(x, positions, theta):
+    """x: [..., S, H, hd] (hd even); positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))              # [hd//2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, hd//2]
+    angles = angles[..., None, :]                            # [..., S, 1, hd//2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len, d_model):
+    """Whisper-style fixed sinusoidal embedding table [seq_len, d_model]."""
+    pos = np.arange(seq_len, dtype=np.float32)[:, None]
+    dim = np.arange(0, d_model, 2, dtype=np.float32)[None, :]
+    inv = np.exp(-np.log(10000.0) * dim / d_model)
+    tab = np.zeros((seq_len, d_model), np.float32)
+    tab[:, 0::2] = np.sin(pos * inv)
+    tab[:, 1::2] = np.cos(pos * inv)
+    return jnp.asarray(tab)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def swiglu_init(key, d_model, d_ff, dtype=jnp.bfloat16):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(k1, d_model, d_ff, dtype),   # gate
+        "wu": dense_init(k2, d_model, d_ff, dtype),   # up
+        "wo": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def swiglu(p, x):
+    g = matmul(x, p["wi"])
+    u = matmul(x, p["wu"])
+    return matmul(jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u, p["wo"])
+
+
+def gelu_mlp_init(key, d_model, d_ff, dtype=jnp.bfloat16):
+    k1, k2 = jax.random.split(key)
+    return {
+        "wi": dense_init(k1, d_model, d_ff, dtype),
+        "bi": jnp.zeros((d_ff,), dtype),
+        "wo": dense_init(k2, d_ff, d_model, dtype),
+        "bo": jnp.zeros((d_model,), dtype),
+    }
+
+
+def gelu_mlp(p, x):
+    h = matmul(x, p["wi"]) + p["bi"]
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return matmul(h, p["wo"]) + p["bo"]
+
+
+# ---------------------------------------------------------------------------
+# embeddings / heads
+# ---------------------------------------------------------------------------
+def embedding_init(key, vocab, d_model, dtype=jnp.bfloat16):
+    return {"w": truncated_normal(key, (vocab, d_model), 0.02, dtype)}
+
+
+def embed(p, tokens):
+    return jnp.take(p["w"], tokens, axis=0)
+
+
+def unembed(p, h):
+    """h: [..., d] -> logits [..., vocab] in fp32."""
+    return jnp.einsum("...d,vd->...v", h, p["w"],
+                      preferred_element_type=jnp.float32)
+
+
+def head_init(key, d_model, vocab, dtype=jnp.bfloat16):
+    return {"w": truncated_normal(key, (vocab, d_model),
+                                  1.0 / np.sqrt(d_model), dtype)}

@@ -1,0 +1,437 @@
+"""Model facades: one object per architecture family exposing
+
+    init(key) -> params
+    loss(params, batch) -> (scalar, metrics)        [train]
+    prefill(params, batch) -> (logits, cache)       [inference prefill]
+    decode_step(params, cache, tokens, pos) -> (logits, cache)
+    init_cache(batch_size, max_seq) -> cache pytree
+    input_specs(shape) -> dict of ShapeDtypeStruct  [dry-run stand-ins]
+
+All functions are pure; ``build_model(cfg)`` selects the family.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import attention as A
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.distributed.sharding import shard_activation
+
+AUX_LOSS_WEIGHT = 0.01
+Z_LOSS_WEIGHT = 1e-4
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def cross_entropy(logits, labels, ignore_index=-1):
+    """logits [B,S,V] fp32; labels [B,S] int32.  Returns (loss, z_loss)."""
+    mask = (labels != ignore_index)
+    labels_safe = jnp.where(mask, labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels_safe[..., None],
+                               axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    denom = jnp.maximum(mask.sum(), 1)
+    z = (lse ** 2 * mask).sum() / denom
+    return nll.sum() / denom, z
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree_util.tree_leaves(params))
+
+
+class BaseLM:
+    """Dense / MoE / VLM decoder-only LM (GQA or MLA attention)."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ---------------- params ------------------------------------------------
+    def init(self, key):
+        cfg, dt = self.cfg, _dtype(self.cfg)
+        ks = jax.random.split(key, 6)
+        params = {"emb": L.embedding_init(ks[0], cfg.vocab_size, cfg.d_model, dt),
+                  "final_norm": L.rmsnorm_init(cfg.d_model)}
+        if cfg.moe is not None and cfg.moe.n_dense_layers:
+            nd = cfg.moe.n_dense_layers
+            params["dense_stack"] = B.stack_init(
+                lambda k: B.decoder_block_init(k, cfg, use_moe=False, dtype=dt),
+                ks[1], nd)
+            params["stack"] = B.stack_init(
+                lambda k: B.decoder_block_init(k, cfg, use_moe=True, dtype=dt),
+                ks[2], cfg.n_layers - nd)
+        else:
+            params["stack"] = B.stack_init(
+                lambda k: B.decoder_block_init(
+                    k, cfg, use_moe=cfg.moe is not None, dtype=dt),
+                ks[2], cfg.n_layers)
+        if not cfg.tie_embeddings:
+            params["head"] = L.head_init(ks[3], cfg.d_model, cfg.vocab_size, dt)
+        if cfg.n_image_patches:
+            params["patch_proj"] = {"w": L.dense_init(ks[4], cfg.d_model,
+                                                      cfg.d_model, dt)}
+        return params
+
+    # ---------------- embedding helpers ------------------------------------
+    def _embed(self, params, batch):
+        cfg = self.cfg
+        h = L.embed(params["emb"], batch["tokens"])
+        if cfg.n_image_patches:
+            patches = L.matmul(batch["patches"].astype(h.dtype),
+                               params["patch_proj"]["w"])
+            h = jnp.concatenate([patches, h], axis=1)
+        return shard_activation(h, "hidden")
+
+    def _unembed(self, params, h):
+        w = params["emb"] if self.cfg.tie_embeddings else params["head"]
+        logits = L.unembed(w, h)
+        return shard_activation(logits, "logits")
+
+    def _positions(self, total_seq):
+        return jnp.arange(total_seq)[None, :]
+
+    # ---------------- forward / loss ----------------------------------------
+    def forward(self, params, batch):
+        cfg = self.cfg
+        h = self._embed(params, batch)
+        positions = self._positions(h.shape[1])
+        aux = jnp.float32(0.0)
+        if "dense_stack" in params:
+            h, a = B.decoder_stack(params["dense_stack"], cfg, h, positions,
+                                   remat=cfg.remat)
+            aux += a
+        h, a = B.decoder_stack(params["stack"], cfg, h, positions,
+                               remat=cfg.remat)
+        aux += a
+        h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        return self._unembed(params, h), aux
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        logits, aux = self.forward(params, batch)
+        if cfg.n_image_patches:   # image positions carry no next-token loss
+            logits = logits[:, cfg.n_image_patches:]
+        ce, z = cross_entropy(logits, batch["labels"])
+        total = ce + AUX_LOSS_WEIGHT * aux + Z_LOSS_WEIGHT * z
+        return total, {"ce": ce, "aux": aux, "z": z}
+
+    # ---------------- serving ----------------------------------------------
+    def _prefill_once(self, params, batch):
+        cfg = self.cfg
+        h = self._embed(params, batch)
+        positions = self._positions(h.shape[1])
+        caches = []
+        if "dense_stack" in params:
+            h, kv = B.decoder_stack_prefill(params["dense_stack"], cfg, h,
+                                            positions)
+            caches.append(kv)
+        h, kv = B.decoder_stack_prefill(params["stack"], cfg, h, positions)
+        caches.append(kv)
+        h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        logits = self._unembed(params, h[:, -1:])
+        cache = caches[0] if len(caches) == 1 else \
+            {"dense": caches[0], "moe": caches[1]}
+        return logits, cache
+
+    def prefill(self, params, batch):
+        """Prefill, optionally processing the request batch in sequential
+        chunks (lax.map) — bounds activation/dispatch peak for MoE archs."""
+        nc = self.cfg.prefill_chunks
+        bsz = batch["tokens"].shape[0]
+        if nc <= 1 or bsz % nc:
+            return self._prefill_once(params, batch)
+        chunked = jax.tree_util.tree_map(
+            lambda x: x.reshape(nc, bsz // nc, *x.shape[1:]), batch)
+        logits, cache = lax.map(
+            lambda b: self._prefill_once(params, b), chunked)
+        # outputs stack on axis 0: logits [nc, b', 1, V]; cache leaves
+        # [nc, L, b', ...] — merge the chunk axis back into batch (dim 1)
+        logits = logits.reshape(bsz, *logits.shape[2:])
+        cache = jax.tree_util.tree_map(
+            lambda a: jnp.moveaxis(a, 0, 1).reshape(
+                a.shape[1], bsz, *a.shape[3:]), cache)
+        return logits, cache
+
+    def init_cache(self, batch_size, max_seq):
+        cfg = self.cfg
+        dt = _dtype(cfg)
+
+        def stack_cache(n_layers):
+            if cfg.mla is not None:
+                m = cfg.mla
+                return {
+                    "ckv": jnp.zeros((n_layers, batch_size, max_seq,
+                                      m.kv_lora_rank), dt),
+                    "krope": jnp.zeros((n_layers, batch_size, max_seq,
+                                        m.qk_rope_head_dim), dt),
+                }
+            hd = cfg.resolved_head_dim
+            return {
+                "k": jnp.zeros((n_layers, batch_size, max_seq,
+                                cfg.n_kv_heads, hd), dt),
+                "v": jnp.zeros((n_layers, batch_size, max_seq,
+                                cfg.n_kv_heads, hd), dt),
+            }
+
+        if cfg.moe is not None and cfg.moe.n_dense_layers:
+            return {"dense": stack_cache(cfg.moe.n_dense_layers),
+                    "moe": stack_cache(cfg.n_layers - cfg.moe.n_dense_layers)}
+        return stack_cache(cfg.n_layers)
+
+    def decode_step(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        h = L.embed(params["emb"], tokens)          # [B,1,D]
+        if isinstance(cache, dict) and "dense" in cache:
+            h, dcache = B.decoder_stack_decode(params["dense_stack"], cfg, h,
+                                               cache["dense"], pos)
+            h, mcache = B.decoder_stack_decode(params["stack"], cfg, h,
+                                               cache["moe"], pos)
+            new_cache = {"dense": dcache, "moe": mcache}
+        else:
+            h, new_cache = B.decoder_stack_decode(params["stack"], cfg, h,
+                                                  cache, pos)
+        h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        return self._unembed(params, h), new_cache
+
+    # ---------------- dry-run input stand-ins -------------------------------
+    def input_specs(self, shape: ShapeConfig) -> Dict:
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        specs = {"tokens": tok}
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        if cfg.n_image_patches:
+            specs["patches"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_image_patches, cfg.d_model), _dtype(cfg))
+        if shape.is_decode:
+            specs["tokens"] = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+            specs.pop("patches", None)
+        return specs
+
+
+class WhisperModel(BaseLM):
+    """Encoder-decoder (whisper backbone); conv/mel frontend is a stub —
+    the batch provides precomputed frame embeddings [B, Se, D]."""
+
+    MAX_DEC_POS = 32768
+
+    def init(self, key):
+        cfg, dt = self.cfg, _dtype(self.cfg)
+        ks = jax.random.split(key, 6)
+        return {
+            "enc_stack": B.stack_init(
+                lambda k: B.encoder_block_init(k, cfg, dt), ks[0],
+                cfg.n_encoder_layers),
+            "enc_norm": L.layernorm_init(cfg.d_model),
+            "emb": L.embedding_init(ks[1], cfg.vocab_size, cfg.d_model, dt),
+            "dec_pos": L.truncated_normal(ks[2],
+                                          (self.MAX_DEC_POS, cfg.d_model),
+                                          0.01, jnp.float32),
+            "dec_stack": B.stack_init(
+                lambda k: B.xdec_block_init(k, cfg, dt), ks[3], cfg.n_layers),
+            "dec_norm": L.layernorm_init(cfg.d_model),
+        }
+
+    def encode(self, params, frames):
+        cfg = self.cfg
+        h = frames.astype(_dtype(cfg))
+        h = h + L.sinusoidal_positions(h.shape[1], cfg.d_model).astype(h.dtype)
+        h = shard_activation(h, "hidden")
+        h = B.encoder_stack(params["enc_stack"], cfg, h, None, remat=cfg.remat)
+        return L.layernorm(params["enc_norm"], h, cfg.norm_eps)
+
+    def forward(self, params, batch):
+        cfg = self.cfg
+        enc = self.encode(params, batch["frames"])
+        tok = batch["tokens"]
+        h = L.embed(params["emb"], tok)
+        h = h + lax.dynamic_slice_in_dim(
+            params["dec_pos"], 0, tok.shape[1], 0).astype(h.dtype)
+        h = shard_activation(h, "hidden")
+        h = B.xdec_stack(params["dec_stack"], cfg, h, enc, None,
+                         remat=cfg.remat)
+        h = L.layernorm(params["dec_norm"], h, cfg.norm_eps)
+        return L.unembed(params["emb"], h), jnp.float32(0.0)
+
+    def loss(self, params, batch):
+        logits, _ = self.forward(params, batch)
+        ce, z = cross_entropy(logits, batch["labels"])
+        return ce + Z_LOSS_WEIGHT * z, {"ce": ce, "z": z}
+
+    def init_cache(self, batch_size, max_seq):
+        cfg, dt = self.cfg, _dtype(self.cfg)
+        hd = cfg.resolved_head_dim
+        se = cfg.encoder_seq_len
+        ls = cfg.n_layers
+        return {
+            "k": jnp.zeros((ls, batch_size, max_seq, cfg.n_kv_heads, hd), dt),
+            "v": jnp.zeros((ls, batch_size, max_seq, cfg.n_kv_heads, hd), dt),
+            "xk": jnp.zeros((ls, batch_size, se, cfg.n_heads, hd), dt),
+            "xv": jnp.zeros((ls, batch_size, se, cfg.n_heads, hd), dt),
+        }
+
+    def prefill(self, params, batch):
+        cfg = self.cfg
+        enc = self.encode(params, batch["frames"])
+        xk, xv = B.xdec_cross_kv(params["dec_stack"], cfg, enc)
+        logits, _ = self.forward(params, batch)
+        # self-attn KV rebuilt during decode; cross KV frozen
+        return logits[:, -1:], {"xk": xk, "xv": xv}
+
+    def decode_step(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        h = L.embed(params["emb"], tokens)
+        posemb = lax.dynamic_slice_in_dim(params["dec_pos"], pos, 1, 0)
+        h = h + posemb.astype(h.dtype)
+        h, new_cache = B.xdec_stack_decode(params["dec_stack"], cfg, h,
+                                           cache, pos)
+        h = L.layernorm(params["dec_norm"], h, cfg.norm_eps)
+        return L.unembed(params["emb"], h), new_cache
+
+    def input_specs(self, shape: ShapeConfig) -> Dict:
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        dt = _dtype(cfg)
+        specs = {
+            "frames": jax.ShapeDtypeStruct((b, cfg.encoder_seq_len,
+                                            cfg.d_model), dt),
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        if shape.is_decode:
+            specs["tokens"] = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+            specs.pop("frames")
+        return specs
+
+
+class XLSTMModel(BaseLM):
+    """xLSTM: scan over super-layers of (slstm_every-1) mLSTM + 1 sLSTM."""
+
+    def _n_supers(self):
+        return self.cfg.n_layers // self.cfg.xlstm.slstm_every
+
+    def init(self, key):
+        cfg, dt = self.cfg, _dtype(self.cfg)
+        ks = jax.random.split(key, 3)
+        return {
+            "emb": L.embedding_init(ks[0], cfg.vocab_size, cfg.d_model, dt),
+            "stack": B.stack_init(
+                lambda k: B.xlstm_super_init(k, cfg, dt), ks[1],
+                self._n_supers()),
+            "final_norm": L.rmsnorm_init(cfg.d_model),
+            "head": L.head_init(ks[2], cfg.d_model, cfg.vocab_size, dt),
+        }
+
+    def forward(self, params, batch):
+        cfg = self.cfg
+        h = shard_activation(L.embed(params["emb"], batch["tokens"]), "hidden")
+        h = B.xlstm_stack(params["stack"], cfg, h, remat=cfg.remat)
+        h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        return self._unembed(params, h), jnp.float32(0.0)
+
+    def init_cache(self, batch_size, max_seq):
+        cfg = self.cfg
+        g = self._n_supers()
+        n_m = max(cfg.xlstm.slstm_every - 1, 1)
+
+        def rep(t, n):
+            return jnp.broadcast_to(t[None], (n, *t.shape))
+
+        m_state = jax.tree_util.tree_map(
+            lambda t: rep(rep(t, n_m), g), S.mlstm_init_state(cfg, batch_size))
+        s_state = jax.tree_util.tree_map(
+            lambda t: rep(t, g), S.slstm_init_state(cfg, batch_size))
+        return {"mlstm": m_state, "slstm": s_state}
+
+    def prefill(self, params, batch):
+        logits, _ = self.forward(params, batch)
+        return logits[:, -1:], self.init_cache(batch["tokens"].shape[0], 0)
+
+    def decode_step(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        h = L.embed(params["emb"], tokens)
+        h, new_cache = B.xlstm_stack_decode(params["stack"], cfg, h, cache)
+        h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        return self._unembed(params, h), new_cache
+
+
+class ZambaModel(BaseLM):
+    """Zamba2: Mamba2 backbone + weight-shared attention block."""
+
+    def _n_supers(self):
+        return self.cfg.n_layers // self.cfg.shared_attn_every
+
+    def init(self, key):
+        cfg, dt = self.cfg, _dtype(self.cfg)
+        ks = jax.random.split(key, 4)
+        return {
+            "emb": L.embedding_init(ks[0], cfg.vocab_size, cfg.d_model, dt),
+            "stack": B.stack_init(
+                lambda k: B.zamba_super_init(k, cfg, dt), ks[1],
+                self._n_supers()),
+            "shared": B.zamba_shared_init(ks[2], cfg, dt),
+            "final_norm": L.rmsnorm_init(cfg.d_model),
+            "head": L.head_init(ks[3], cfg.d_model, cfg.vocab_size, dt),
+        }
+
+    def forward(self, params, batch):
+        cfg = self.cfg
+        emb0 = shard_activation(L.embed(params["emb"], batch["tokens"]),
+                                "hidden")
+        positions = self._positions(emb0.shape[1])
+        h = B.zamba_stack(params["stack"], cfg, emb0, params["shared"], emb0,
+                          positions, remat=cfg.remat)
+        h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        return self._unembed(params, h), jnp.float32(0.0)
+
+    def init_cache(self, batch_size, max_seq):
+        cfg, dt = self.cfg, _dtype(self.cfg)
+        g = self._n_supers()
+        hd = cfg.resolved_head_dim
+
+        def rep(t, n):
+            return jnp.broadcast_to(t[None], (n, *t.shape))
+
+        m_state = jax.tree_util.tree_map(
+            lambda t: rep(rep(t, cfg.shared_attn_every), g),
+            S.mamba2_init_state(cfg, batch_size))
+        return {
+            "mamba": m_state,
+            "k": jnp.zeros((g, batch_size, max_seq, cfg.n_kv_heads, hd), dt),
+            "v": jnp.zeros((g, batch_size, max_seq, cfg.n_kv_heads, hd), dt),
+        }
+
+    def prefill(self, params, batch):
+        logits, _ = self.forward(params, batch)
+        return logits[:, -1:], None
+
+    def decode_step(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        emb0 = L.embed(params["emb"], tokens)
+        h, new_cache = B.zamba_stack_decode(params["stack"], cfg, emb0,
+                                            params["shared"], emb0, cache, pos)
+        h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        return self._unembed(params, h), new_cache
+
+
+def build_model(cfg: ModelConfig) -> BaseLM:
+    if cfg.family == "audio":
+        return WhisperModel(cfg)
+    if cfg.family == "ssm" and cfg.xlstm is not None:
+        return XLSTMModel(cfg)
+    if cfg.family == "hybrid":
+        return ZambaModel(cfg)
+    return BaseLM(cfg)

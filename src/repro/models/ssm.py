@@ -1,0 +1,405 @@
+"""State-space / recurrent blocks: Mamba2 (SSD) and xLSTM (mLSTM + sLSTM).
+
+All blocks provide three entry points:
+  * ``*_apply``  — full-sequence training/prefill form (chunked parallel scan)
+  * ``*_decode`` — single-token recurrent step against a carried state
+  * ``*_init_state`` — zero state for decode
+
+The chunked SSD scan is the TPU-native adaptation of Mamba2: quadratic
+attention-like compute *within* a chunk (MXU-friendly einsums) and a cheap
+``lax.scan`` over chunk states *between* chunks — the same
+halo/interior decomposition idea DIFET uses for image tiles (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.models import layers as L
+
+
+# ===========================================================================
+# Mamba2 (SSD)
+# ===========================================================================
+def mamba2_dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return d_inner, n_heads
+
+
+def mamba2_init(key, cfg, dtype=jnp.bfloat16):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, n_heads = mamba2_dims(cfg)
+    d_xbc = d_inner + 2 * s.d_state          # x stream + B + C (n_groups=1)
+    ks = jax.random.split(key, 6)
+    return {
+        # fused input projection: [z | xBC | dt]
+        "in_proj": L.dense_init(ks[0], d, d_inner + d_xbc + n_heads, dtype),
+        "conv": {
+            "w": L.truncated_normal(ks[1], (s.d_conv, d_xbc),
+                                    1.0 / np.sqrt(s.d_conv), dtype),
+            "b": jnp.zeros((d_xbc,), dtype),
+        },
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads, dtype=jnp.float32)),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.linspace(1e-3, 1e-1, n_heads, dtype=jnp.float32))),
+        "norm": L.rmsnorm_init(d_inner),
+        "out_proj": L.dense_init(ks[2], d_inner, d, dtype),
+    }
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv, kernel K: xbc [B,S,C], w [K,C]."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu((out + b).astype(jnp.float32)).astype(xbc.dtype)
+
+
+def _ssd_chunked(x, dt, A, B, C, chunk):
+    """Chunked SSD scan, fully inside a ``lax.scan`` over chunks.
+
+    Per-chunk work is quadratic-in-chunk MXU einsums; only the running state
+    [B,H,P,N] is carried, so live memory is O(B·chunk²·H) for one chunk, not
+    the whole sequence — this is what makes prefill_32k/long-context lowerable.
+
+    x  [B,S,H,P];  dt [B,S,H] (positive);  A [H] (negative rates)
+    B,C [B,S,N] (single group, broadcast over heads).  Returns y [B,S,H,P].
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    nc = s // chunk
+    q = chunk
+    # chunk-major layouts for scan: [nc, B, Q, ...]
+    xc = jnp.moveaxis(x.reshape(b, nc, q, h, p), 1, 0).astype(jnp.float32)
+    dtc = jnp.moveaxis(dt.reshape(b, nc, q, h), 1, 0)
+    Bc = jnp.moveaxis(B.reshape(b, nc, q, n), 1, 0).astype(jnp.float32)
+    Cc = jnp.moveaxis(C.reshape(b, nc, q, n), 1, 0).astype(jnp.float32)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+
+    def body(state, inp):
+        xb, dtb, Bb, Cb = inp                       # [B,Q,...]
+        dA = dtb * A                                # [B,Q,H]
+        cum = jnp.cumsum(dA, axis=1)
+        xdt = xb * dtb[..., None]
+        # intra-chunk: L[i,j] = exp(cum_i - cum_j), j <= i
+        li = cum[:, :, None, :] - cum[:, None, :, :]        # [B,Q,Q,H]
+        decay = jnp.where(mask[None, :, :, None], jnp.exp(li), 0.0)
+        cb = jnp.einsum("bin,bjn->bij", Cb, Bb)
+        y_intra = jnp.einsum("bij,bijh,bjhp->bihp", cb, decay, xdt)
+        # inter-chunk from carried state
+        y_inter = jnp.einsum("bin,bih,bhpn->bihp", Cb, jnp.exp(cum), state)
+        # state update
+        seg = jnp.exp(cum[:, -1:, :] - cum)                 # [B,Q,H]
+        upd = jnp.einsum("bjn,bjh,bjhp->bhpn", Bb, seg, xdt)
+        state = state * jnp.exp(cum[:, -1, :])[:, :, None, None] + upd
+        return state, y_intra + y_inter
+
+    s0 = jnp.zeros((b, h, p, n), jnp.float32)
+    from repro.models.analysis_flags import single_chunk_active
+    _, ys = lax.scan(body, s0, (xc, dtc, Bc, Cc),
+                     unroll=nc if single_chunk_active() else 1)
+    return jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p)      # [nc,B,Q,H,P]
+
+
+def mamba2_apply(p, cfg, x):
+    """x [B,S,d] -> [B,S,d]; full-sequence chunked SSD."""
+    s_cfg = cfg.ssm
+    b, s, d = x.shape
+    d_inner, n_heads = mamba2_dims(cfg)
+    d_xbc = d_inner + 2 * s_cfg.d_state
+    zxbcdt = L.matmul(x, p["in_proj"])
+    z, xbc, dt_raw = jnp.split(zxbcdt, [d_inner, d_inner + d_xbc], axis=-1)
+    xbc = _causal_conv(xbc, p["conv"]["w"], p["conv"]["b"])
+    xs, B, C = jnp.split(xbc, [d_inner, d_inner + s_cfg.d_state], axis=-1)
+    xs = xs.reshape(b, s, n_heads, s_cfg.head_dim)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    chunk = min(s_cfg.chunk_size, s)
+    if s % chunk:
+        chunk = int(np.gcd(s, chunk)) or 1
+    y = _ssd_chunked(xs, dt, A, B, C, chunk)
+    y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = L.rmsnorm(p["norm"], y, cfg.norm_eps)
+    return L.matmul(y, p["out_proj"])
+
+
+def mamba2_init_state(cfg, batch, dtype=jnp.float32):
+    s = cfg.ssm
+    d_inner, n_heads = mamba2_dims(cfg)
+    d_xbc = d_inner + 2 * s.d_state
+    return {
+        "ssm": jnp.zeros((batch, n_heads, s.head_dim, s.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, s.d_conv - 1, d_xbc), dtype),
+    }
+
+
+def mamba2_decode(p, cfg, x, state):
+    """x [B,1,d]; recurrent single-step update."""
+    s_cfg = cfg.ssm
+    b = x.shape[0]
+    d_inner, n_heads = mamba2_dims(cfg)
+    d_xbc = d_inner + 2 * s_cfg.d_state
+    zxbcdt = L.matmul(x, p["in_proj"])[:, 0]              # [B, *]
+    z, xbc, dt_raw = jnp.split(zxbcdt, [d_inner, d_inner + d_xbc], axis=-1)
+    # conv cache: window = [cache | new]
+    win = jnp.concatenate([state["conv"], xbc[:, None, :]], axis=1)
+    conv_out = (win * p["conv"]["w"][None]).sum(axis=1) + p["conv"]["b"]
+    xbc_c = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    new_conv = win[:, 1:, :]
+    xs, B, C = jnp.split(xbc_c, [d_inner, d_inner + s_cfg.d_state], axis=-1)
+    xs = xs.reshape(b, n_heads, s_cfg.head_dim).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A)                               # [B,H]
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    upd = jnp.einsum("bhp,bn,bh->bhpn", xs, Bf, dt)
+    ssm = state["ssm"] * decay[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", ssm, Cf) + xs * p["D"][None, :, None]
+    y = y.reshape(b, 1, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)[:, None, :]
+    y = L.rmsnorm(p["norm"], y, cfg.norm_eps)
+    return L.matmul(y, p["out_proj"]), {"ssm": ssm, "conv": new_conv}
+
+
+# ===========================================================================
+# mLSTM (xLSTM matrix-memory block)
+# ===========================================================================
+def mlstm_dims(cfg):
+    d_up = int(cfg.xlstm.proj_factor * cfg.d_model)
+    n_heads = cfg.n_heads
+    head_dim = d_up // n_heads
+    return d_up, n_heads, head_dim
+
+
+def mlstm_init(key, cfg, dtype=jnp.bfloat16):
+    x_cfg = cfg.xlstm
+    d = cfg.d_model
+    d_up, n_heads, head_dim = mlstm_dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": L.rmsnorm_init(d),
+        "up_proj": L.dense_init(ks[0], d, 2 * d_up, dtype),   # [u | z]
+        "conv": {
+            "w": L.truncated_normal(ks[1], (x_cfg.conv_kernel, d_up),
+                                    1.0 / np.sqrt(x_cfg.conv_kernel), dtype),
+            "b": jnp.zeros((d_up,), dtype),
+        },
+        "wq": L.dense_init(ks[2], d_up, d_up, dtype),
+        "wk": L.dense_init(ks[3], d_up, d_up, dtype),
+        "wv": L.dense_init(ks[4], d_up, d_up, dtype),
+        "w_gates": L.truncated_normal(ks[5], (d_up, 2 * n_heads),
+                                      1.0 / np.sqrt(d_up), jnp.float32),
+        "b_gates": jnp.concatenate([
+            jnp.linspace(3.0, 6.0, n_heads, dtype=jnp.float32),   # forget
+            jnp.zeros((n_heads,), jnp.float32)]),                 # input
+        "out_norm": L.rmsnorm_init(d_up),
+        "down_proj": L.dense_init(ks[6], d_up, d, dtype),
+    }
+
+
+def _mlstm_chunked(q, k, v, log_f, log_i, chunk):
+    """Stabilized chunkwise-parallel mLSTM (lax.scan over chunks).
+
+    q,k,v: [B,S,H,P]; log_f/log_i: [B,S,H].  Returns h [B,S,H,P].
+
+    Within a chunk: D[i,j] = exp(cumF_i - cumF_j + log_i_j - m_i) for j <= i.
+    Across chunks the state (C, n) is carried with its own running stabilizer
+    m_run; a query i sees the carried state scaled by
+    exp(m_run + cumF_i - m_i).  Denominator: max(|Σ_j w_ij|, exp(-m_i)).
+    """
+    b, s, h, p = q.shape
+    nc = s // chunk
+    Q = chunk
+    cm = lambda t: jnp.moveaxis(
+        t.reshape(b, nc, Q, *t.shape[2:]), 1, 0).astype(jnp.float32)
+    qc, kc, vc, lfc, lic = cm(q), cm(k), cm(v), cm(log_f), cm(log_i)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def body(carry, inp):
+        C, nvec, m_run = carry                     # [B,H,P,P],[B,H,P],[B,H]
+        qb, kb, vb, lf, li = inp                   # [B,Q,H,*]
+        cumf = jnp.cumsum(lf, axis=1)              # [B,Q,H]
+        logd = cumf[:, :, None, :] - cumf[:, None, :, :] + li[:, None, :, :]
+        logd = jnp.where(mask[None, :, :, None], logd, -1e30)
+        inter_log = m_run[:, None, :] + cumf       # [B,Q,H]
+        m_i = jnp.maximum(jnp.max(logd, axis=2), inter_log)
+        d = jnp.exp(logd - m_i[:, :, None, :])
+        qk = jnp.einsum("bihp,bjhp->bijh", qb, kb) / np.sqrt(p)
+        w = qk * d
+        num = jnp.einsum("bijh,bjhp->bihp", w, vb)
+        den = w.sum(axis=2)                        # [B,Q,H]
+        # carried-state contribution
+        scale = jnp.exp(inter_log - m_i)           # [B,Q,H]
+        num = num + jnp.einsum("bihq,bhpq,bih->bihp", qb, C, scale)
+        den = den + jnp.einsum("bihq,bhq,bih->bih", qb, nvec, scale)
+        y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[..., None]
+        # state update to end of chunk
+        tot = cumf[:, -1, :]                       # [B,H]
+        e_j = li + tot[:, None, :] - cumf          # [B,Q,H] decay j -> chunk end
+        m_new = jnp.maximum(m_run + tot, jnp.max(e_j, axis=1))
+        sj = jnp.exp(e_j - m_new[:, None, :])
+        k_s = kb / np.sqrt(p)
+        C = C * jnp.exp(m_run + tot - m_new)[:, :, None, None] + \
+            jnp.einsum("bjh,bjhp,bjhq->bhpq", sj, vb, k_s)
+        nvec = nvec * jnp.exp(m_run + tot - m_new)[:, :, None] + \
+            jnp.einsum("bjh,bjhq->bhq", sj, k_s)
+        return (C, nvec, m_new), y
+
+    C0 = jnp.zeros((b, h, p, p), jnp.float32)
+    n0 = jnp.zeros((b, h, p), jnp.float32)
+    m0 = jnp.zeros((b, h), jnp.float32)
+    from repro.models.analysis_flags import single_chunk_active
+    _, ys = lax.scan(body, (C0, n0, m0), (qc, kc, vc, lfc, lic),
+                     unroll=nc if single_chunk_active() else 1)
+    return jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p)
+
+
+def mlstm_apply(p, cfg, x):
+    """Full-sequence mLSTM block (pre-norm residual handled by caller)."""
+    b, s, d = x.shape
+    d_up, n_heads, head_dim = mlstm_dims(cfg)
+    uz = L.matmul(x, p["up_proj"])
+    u, z = jnp.split(uz, 2, axis=-1)
+    uc = _causal_conv(u, p["conv"]["w"], p["conv"]["b"])
+    q = L.matmul(uc, p["wq"]).reshape(b, s, n_heads, head_dim)
+    k = L.matmul(uc, p["wk"]).reshape(b, s, n_heads, head_dim)
+    v = L.matmul(u, p["wv"]).reshape(b, s, n_heads, head_dim)
+    gates = (uc.astype(jnp.float32) @ p["w_gates"]) + p["b_gates"]
+    f_pre, i_pre = jnp.split(gates, 2, axis=-1)            # [B,S,H]
+    log_f = -jax.nn.softplus(-f_pre)                       # log sigmoid
+    log_i = i_pre                                          # exponential input gate
+    chunk = min(256, s)
+    if s % chunk:
+        chunk = int(np.gcd(s, chunk)) or 1
+    hidden = _mlstm_chunked(q, k, v, log_f, log_i, chunk)
+    hidden = hidden.reshape(b, s, d_up).astype(x.dtype)
+    hidden = L.rmsnorm(p["out_norm"], hidden, cfg.norm_eps)
+    hidden = hidden * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return L.matmul(hidden, p["down_proj"])
+
+
+def mlstm_init_state(cfg, batch):
+    d_up, n_heads, head_dim = mlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, n_heads, head_dim, head_dim), jnp.float32),
+        "n": jnp.zeros((batch, n_heads, head_dim), jnp.float32),
+        # m starts at 0 (not -inf) to match the chunked-parallel stabilizer
+        # initialization and avoid -inf - -inf NaNs; only effect is the
+        # denominator floor exp(-m) on the first steps.
+        "m": jnp.zeros((batch, n_heads), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.xlstm.conv_kernel - 1, d_up),
+                          jnp.bfloat16),
+    }
+
+
+def mlstm_decode(p, cfg, x, state):
+    """x [B,1,d]; stabilized recurrent step."""
+    b = x.shape[0]
+    d_up, n_heads, head_dim = mlstm_dims(cfg)
+    uz = L.matmul(x, p["up_proj"])[:, 0]
+    u, z = jnp.split(uz, 2, axis=-1)
+    win = jnp.concatenate([state["conv"].astype(u.dtype), u[:, None, :]],
+                          axis=1)
+    conv_out = (win * p["conv"]["w"][None]).sum(axis=1) + p["conv"]["b"]
+    uc = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    q = (uc @ p["wq"]).reshape(b, n_heads, head_dim).astype(jnp.float32)
+    k = (uc @ p["wk"]).reshape(b, n_heads, head_dim).astype(jnp.float32)
+    v = (u @ p["wv"]).reshape(b, n_heads, head_dim).astype(jnp.float32)
+    gates = (uc.astype(jnp.float32) @ p["w_gates"]) + p["b_gates"]
+    f_pre, i_pre = jnp.split(gates, 2, axis=-1)            # [B,H]
+    log_f = -jax.nn.softplus(-f_pre)
+    log_i = i_pre
+    m_new = jnp.maximum(log_f + state["m"], log_i)
+    f_s = jnp.exp(log_f + state["m"] - m_new)              # stabilized gates
+    i_s = jnp.exp(log_i - m_new)
+    k_scaled = k / np.sqrt(head_dim)
+    C = state["C"] * f_s[..., None, None] + \
+        i_s[..., None, None] * jnp.einsum("bhp,bhq->bhpq", v, k_scaled)
+    nvec = state["n"] * f_s[..., None] + i_s[..., None] * k_scaled
+    num = jnp.einsum("bhpq,bhq->bhp", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhq,bhq->bh", nvec, q)),
+                      jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(b, 1, d_up).astype(x.dtype)
+    h = L.rmsnorm(p["out_norm"], h, cfg.norm_eps)
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)[:, None, :]
+    out = L.matmul(h, p["down_proj"])
+    new_state = {"C": C, "n": nvec, "m": m_new, "conv": win[:, 1:, :].astype(jnp.bfloat16)}
+    return out, new_state
+
+
+# ===========================================================================
+# sLSTM (xLSTM scalar-memory block) — sequential scan (inherent recurrence)
+# ===========================================================================
+def slstm_init(key, cfg, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    d_ff = int(4.0 / 3.0 * 2 * d)
+    return {
+        "norm": L.rmsnorm_init(d),
+        "w": L.truncated_normal(ks[0], (d, 4 * d), 1.0 / np.sqrt(d),
+                                jnp.float32),
+        "r": L.truncated_normal(ks[1], (d, 4 * d), 1.0 / np.sqrt(d),
+                                jnp.float32),
+        "b": jnp.zeros((4 * d,), jnp.float32),
+        "out_norm": L.rmsnorm_init(d),
+        "mlp": L.swiglu_init(ks[2], d, d_ff, dtype),
+        "mlp_norm": L.rmsnorm_init(d),
+    }
+
+
+def slstm_init_state(cfg, batch):
+    d = cfg.d_model
+    z = lambda: jnp.zeros((batch, d), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(),
+            "m": jnp.full((batch, d), -jnp.inf, jnp.float32)}
+
+
+def _slstm_cell(p, x_t, st):
+    """One sLSTM step.  x_t [B,d] fp32; state dict of [B,d]."""
+    pre = x_t @ p["w"] + st["h"] @ p["r"] + p["b"]
+    z_pre, i_pre, f_pre, o_pre = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    log_f = -jax.nn.softplus(-f_pre)
+    m_new = jnp.maximum(log_f + st["m"], i_pre)
+    i_s = jnp.exp(i_pre - m_new)
+    f_s = jnp.exp(log_f + st["m"] - m_new)
+    c = f_s * st["c"] + i_s * z
+    n = jnp.maximum(f_s * st["n"] + i_s, 1e-6)
+    h = o * (c / n)
+    return {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def slstm_apply(p, cfg, x):
+    """x [B,S,d]; sequential lax.scan over time (sLSTM is not parallelizable)."""
+    b, s, d = x.shape
+    xf = x.astype(jnp.float32)
+
+    def body(st, x_t):
+        st = _slstm_cell(p, x_t, st)
+        return st, st["h"]
+
+    st0 = slstm_init_state(cfg, b)
+    _, hs = lax.scan(body, st0, jnp.moveaxis(xf, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    h = L.rmsnorm(p["out_norm"], h, cfg.norm_eps)
+    # post-MLP (sLSTM block carries its own small FFN)
+    h = h + L.swiglu(p["mlp"], L.rmsnorm(p["mlp_norm"], h, cfg.norm_eps))
+    return h
+
+
+def slstm_decode(p, cfg, x, state):
+    st = _slstm_cell(p, x[:, 0].astype(jnp.float32), state)
+    h = st["h"][:, None, :].astype(x.dtype)
+    h = L.rmsnorm(p["out_norm"], h, cfg.norm_eps)
+    h = h + L.swiglu(p["mlp"], L.rmsnorm(p["mlp_norm"], h, cfg.norm_eps))
+    return h, st

@@ -1,0 +1,67 @@
+"""AdamW with fp32 state, decoupled weight decay, global-norm clipping.
+
+ZeRO-style sharding falls out of the sharding rules: optimizer state trees
+mirror the parameter tree, so each m/v leaf inherits its parameter's
+FSDP × TP sharding — states are never replicated across data-parallel ranks.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+def clip_by_global_norm(grads, max_norm):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+@dataclass(frozen=True)
+class AdamW:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    max_grad_norm: float = 1.0
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, grads, state, params, lr):
+        grads, gnorm = clip_by_global_norm(grads, self.max_grad_norm)
+        count = state["count"] + 1
+        b1c = 1.0 - self.b1 ** count.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** count.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m = self.b1 * m + (1 - self.b1) * gf
+            v = self.b2 * v + (1 - self.b2) * gf * gf
+            mhat = m / b1c
+            vhat = v / b2c
+            step = mhat / (jnp.sqrt(vhat) + self.eps)
+            # decoupled weight decay on matrices only (ndim >= 2)
+            if p.ndim >= 2:
+                step = step + self.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+            return new_p, m, v
+
+        out = jax.tree_util.tree_map(upd, grads, state["m"], state["v"],
+                                     params)
+        new_params = jax.tree_util.tree_map(lambda t: t[0], out,
+                                            is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree_util.tree_map(lambda t: t[1], out,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree_util.tree_map(lambda t: t[2], out,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v, "count": count}, gnorm

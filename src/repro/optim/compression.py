@@ -1,0 +1,36 @@
+"""Gradient compression with error feedback (optional, off by default).
+
+On a real multi-pod deployment the cross-pod gradient reduction is the
+slowest collective (DCN, not ICI).  int8 quantization with per-tensor scale
+cuts that payload 4x (bf16) at the cost of quantization noise, which error
+feedback re-injects on the next step (1-bit-Adam-style).  Under pjit the
+reduction itself is implicit in the sharded backward pass, so this module
+implements the *numerics* (quantize → dequantize + error buffer); the
+payload saving is accounted analytically in the roofline (§Perf), and the
+comm-path integration point is the grads pytree inside train_step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _q(g, err):
+    gf = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return deq.astype(g.dtype), gf - deq
+
+
+def compress_decompress(grads, error_state):
+    """Returns (dequantized grads, new error feedback state)."""
+    if error_state is None:
+        error_state = jax.tree_util.tree_map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+    out = jax.tree_util.tree_map(_q, grads, error_state)
+    deq = jax.tree_util.tree_map(lambda t: t[0], out,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+    err = jax.tree_util.tree_map(lambda t: t[1], out,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+    return deq, err

@@ -1,0 +1,13 @@
+"""LR schedules."""
+import jax.numpy as jnp
+
+
+def cosine_schedule(peak_lr, warmup_steps, total_steps, min_ratio=0.1):
+    def lr(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        progress = jnp.clip((step - warmup_steps)
+                            / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * progress))
+        return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+    return lr

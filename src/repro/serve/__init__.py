@@ -1,0 +1,1 @@
+from repro.serve.step import make_prefill_fn, make_decode_fn, greedy_generate  # noqa: F401

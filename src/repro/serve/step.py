@@ -1,0 +1,39 @@
+"""Serving: prefill + single-token decode steps (KV-cache donation) and a
+simple batched greedy generation loop for the example drivers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def make_prefill_fn(model):
+    def prefill(params, batch):
+        return model.prefill(params, batch)
+    return prefill
+
+
+def make_decode_fn(model):
+    def decode_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+    return decode_step
+
+
+def greedy_generate(model, params, prompt_tokens, n_steps, cache_len=None):
+    """prompt_tokens [B, S0] -> generated [B, n_steps] (greedy, batched)."""
+    b, s0 = prompt_tokens.shape
+    cache_len = cache_len or (s0 + n_steps)
+    cache = model.init_cache(b, cache_len)
+    decode = jax.jit(model.decode_step, donate_argnums=(1,))
+
+    # feed the prompt token-by-token (cache warm-up), then generate
+    logits = None
+    for i in range(s0):
+        logits, cache = decode(params, cache, prompt_tokens[:, i:i + 1],
+                               jnp.int32(i))
+    out = []
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    for i in range(n_steps):
+        out.append(tok)
+        logits, cache = decode(params, cache, tok, jnp.int32(s0 + i))
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,3 @@
+from repro.train.step import (  # noqa: F401
+    make_train_step, make_init_fn, TrainStepConfig,
+)

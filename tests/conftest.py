@@ -1,0 +1,42 @@
+import os
+import sys
+
+# Tests must see the real single CPU device (the 512-device override is
+# exclusively dryrun.py's).  Keep compile caches warm across tests.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.RandomState(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+class FakeMesh:
+    """Mesh stand-in exposing just what the sharding rules consume
+    (axis_names / shape / size) without touching device state."""
+
+    def __init__(self, **axes):
+        self.axis_names = tuple(axes)
+        self.shape = dict(axes)
+        self.size = int(np.prod(list(axes.values())))
+
+
+@pytest.fixture
+def mesh_16x16():
+    return FakeMesh(data=16, model=16)
+
+
+@pytest.fixture
+def mesh_pod():
+    return FakeMesh(pod=2, data=16, model=16)

@@ -1,0 +1,60 @@
+"""Roofline-analysis mode must be numerics-preserving: unrolled chunk scans
+and unrolled layer stacks compute exactly what production computes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import attention as A
+from repro.models import build_model
+from repro.models.analysis_flags import single_chunk, single_chunk_active
+from repro.distributed.sharding import largest_divisible_prefix
+
+
+def test_single_chunk_flag_scoped():
+    assert not single_chunk_active()
+    with single_chunk():
+        assert single_chunk_active()
+    assert not single_chunk_active()
+
+
+def test_unrolled_online_attention_matches_scanned():
+    rng = np.random.RandomState(0)
+    q = jnp.asarray(rng.randn(1, 16, 2, 8), jnp.float32)
+    k = jnp.asarray(rng.randn(1, 16, 2, 8), jnp.float32)
+    v = jnp.asarray(rng.randn(1, 16, 2, 8), jnp.float32)
+    a = A.attention_online(q, k, v, causal=True, chunk=4, unroll=False)
+    b = A.attention_online(q, k, v, causal=True, chunk=4, unroll=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_unrolled_stacks_match_scanned():
+    cfg = get_config("internlm2-1.8b").reduced().replace(remat="nothing")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jnp.asarray(np.random.RandomState(1).randint(
+        0, cfg.vocab_size, (2, 16)), jnp.int32)
+    logits_scan, _ = jax.jit(model.forward)(params, {"tokens": tokens})
+    model.cfg = cfg.replace(unroll_stacks=True)
+    logits_unroll, _ = jax.jit(model.forward)(params, {"tokens": tokens})
+    # bf16 params: scan vs unrolled loop reassociate accumulations —
+    # differences are O(bf16 eps * depth), not algorithmic
+    np.testing.assert_allclose(np.asarray(logits_scan),
+                               np.asarray(logits_unroll),
+                               rtol=0.05, atol=0.05)
+
+
+class _M:
+    axis_names = ("data", "model")
+    shape = {"data": 16, "model": 16}
+    size = 256
+
+
+def test_largest_divisible_prefix():
+    m = _M()
+    assert largest_divisible_prefix(256, ("data", "model"), m) \
+        == ("data", "model")
+    assert largest_divisible_prefix(32, ("data", "model"), m) == "data"
+    assert largest_divisible_prefix(7, ("data", "model"), m) is None
+    assert largest_divisible_prefix(128, ("data", "model"), m) == "data"

@@ -1,0 +1,93 @@
+"""Attention algorithm equivalences + MLA absorption correctness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import attention as A
+
+
+@pytest.mark.parametrize("sq,sk,causal", [(16, 16, True), (16, 16, False),
+                                          (8, 32, False), (64, 64, True)])
+def test_online_matches_einsum(sq, sk, causal):
+    rng = np.random.RandomState(0)
+    q = jnp.asarray(rng.randn(2, sq, 4, 16), jnp.float32)
+    k = jnp.asarray(rng.randn(2, sk, 4, 16), jnp.float32)
+    v = jnp.asarray(rng.randn(2, sk, 4, 16), jnp.float32)
+    a = A.attention_einsum(q, k, v, causal=causal)
+    b = A.attention_online(q, k, v, causal=causal, chunk=8)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_online_mixed_head_dims():
+    """MLA: q/k head dim != v head dim."""
+    rng = np.random.RandomState(1)
+    q = jnp.asarray(rng.randn(1, 8, 2, 24), jnp.float32)
+    k = jnp.asarray(rng.randn(1, 8, 2, 24), jnp.float32)
+    v = jnp.asarray(rng.randn(1, 8, 2, 16), jnp.float32)
+    a = A.attention_einsum(q, k, v, causal=True)
+    b = A.attention_online(q, k, v, causal=True, chunk=4)
+    assert a.shape == b.shape == (1, 8, 2, 16)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_gqa_decode_matches_full():
+    cfg = get_config("internlm2-1.8b").reduced()
+    p = A.gqa_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    rng = np.random.RandomState(2)
+    s = 6
+    x = jnp.asarray(rng.randn(2, s, cfg.d_model), jnp.float32)
+    positions = jnp.arange(s)[None, :]
+    full = A.gqa_attention(p, cfg, x, positions, causal=True)
+
+    hd = cfg.resolved_head_dim
+    kc = jnp.zeros((2, s, cfg.n_kv_heads, hd), jnp.float32)
+    vc = jnp.zeros((2, s, cfg.n_kv_heads, hd), jnp.float32)
+    outs = []
+    for i in range(s):
+        o, kc, vc = A.gqa_decode(p, cfg, x[:, i:i + 1], kc, vc, i)
+        outs.append(o)
+    step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(step),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_mla_absorbed_decode_matches_naive():
+    """Weight-absorbed latent-space decode == naive expanded attention."""
+    cfg = get_config("deepseek-v3-671b").reduced()
+    p = A.mla_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    rng = np.random.RandomState(3)
+    s = 5
+    x = jnp.asarray(rng.randn(2, s, cfg.d_model), jnp.float32)
+    positions = jnp.arange(s)[None, :]
+    full, _, _ = A.mla_attention(p, cfg, x, positions, causal=True)
+
+    m = cfg.mla
+    ckv = jnp.zeros((2, s, m.kv_lora_rank), jnp.float32)
+    kr = jnp.zeros((2, s, m.qk_rope_head_dim), jnp.float32)
+    outs = []
+    for i in range(s):
+        o, ckv, kr = A.mla_decode_absorbed(p, cfg, x[:, i:i + 1], ckv, kr, i)
+        outs.append(o)
+    step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(step),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_rope_rotation_invariance():
+    """<rope(q,p), rope(k,p)> depends only on relative position."""
+    from repro.models import layers as L
+    rng = np.random.RandomState(4)
+    q = jnp.asarray(rng.randn(1, 1, 2, 32), jnp.float32)
+    k = jnp.asarray(rng.randn(1, 1, 2, 32), jnp.float32)
+
+    def dot_at(pq, pk):
+        qr = L.apply_rope(q, jnp.full((1, 1), pq), 1e4)
+        kr = L.apply_rope(k, jnp.full((1, 1), pk), 1e4)
+        return float(jnp.einsum("bshd,bshd->", qr, kr))
+
+    assert abs(dot_at(5, 3) - dot_at(105, 103)) < 1e-3
+    assert abs(dot_at(5, 3) - dot_at(6, 3)) > 1e-4   # but absolute matters

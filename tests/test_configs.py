@@ -1,0 +1,55 @@
+"""Config registry + reduced-config invariants."""
+import pytest
+
+from repro.configs import (
+    get_config, all_arch_ids, applicable_shapes, SHAPES)
+
+EXPECTED_ARCHS = {
+    "internlm2-1.8b", "qwen1.5-110b", "glm4-9b", "smollm-135m",
+    "whisper-large-v3", "deepseek-v3-671b", "dbrx-132b", "internvl2-2b",
+    "xlstm-350m", "zamba2-2.7b",
+}
+
+
+def test_all_assigned_archs_registered():
+    assert EXPECTED_ARCHS == set(all_arch_ids())
+
+
+def test_shapes_table():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32768
+    assert SHAPES["decode_32k"].is_decode
+    assert SHAPES["long_500k"].seq_len == 524288
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED_ARCHS))
+def test_applicable_shapes(arch):
+    cfg = get_config(arch)
+    shapes = applicable_shapes(cfg)
+    assert "train_4k" in shapes
+    # long_500k only for sub-quadratic archs (DESIGN.md §4)
+    assert ("long_500k" in shapes) == (cfg.family in ("ssm", "hybrid"))
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED_ARCHS))
+def test_reduced_is_small_and_same_family(arch):
+    cfg = get_config(arch)
+    r = cfg.reduced()
+    assert r.family == cfg.family
+    assert r.d_model <= 128 and r.n_layers <= 4 and r.vocab_size <= 512
+    assert (r.moe is None) == (cfg.moe is None)
+    assert (r.mla is None) == (cfg.mla is None)
+    assert (r.ssm is None) == (cfg.ssm is None)
+
+
+def test_exact_assigned_dims():
+    q = get_config("qwen1.5-110b")
+    assert (q.n_layers, q.d_model, q.n_heads, q.n_kv_heads, q.d_ff,
+            q.vocab_size) == (80, 8192, 64, 8, 49152, 152064)
+    assert q.qkv_bias
+    d = get_config("deepseek-v3-671b")
+    assert d.moe.n_experts == 256 and d.moe.n_experts_per_tok == 8
+    assert d.mla.kv_lora_rank == 512
+    z = get_config("zamba2-2.7b")
+    assert z.ssm.d_state == 64 and z.n_layers == 54

@@ -1,0 +1,97 @@
+"""DIFET system tests: partition invariance (the paper's core property),
+bundle round-trips, and per-algorithm feature extraction."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.difet_paper import DifetConfig, PAPER_ALGORITHMS
+from repro.core.bundle import BundleStore, bundle_scenes, tile_scene, rgba_to_gray
+from repro.core.engine import extract_features
+from repro.data.landsat import synthetic_scene, synthetic_scene_rgba
+
+
+def counts_for(scene, tile, alg="harris", halo=24):
+    cfg = DifetConfig(tile=tile, halo=halo, max_keypoints_per_tile=128)
+    b = tile_scene(scene, cfg)
+    r = jax.jit(lambda t, h: extract_features(t, h, alg, cfg))(
+        b.tiles, b.headers)
+    return int(r["total_count"]), r
+
+
+@pytest.mark.parametrize("alg", ["harris", "fast"])
+def test_partition_invariance(alg):
+    """Feature counts must not depend on the tiling — the TPU analogue of
+    'one mapper per image == many mappers per image' (DESIGN.md §2)."""
+    scene = synthetic_scene(200, 300, seed=5)
+    c64, _ = counts_for(scene, 64, alg)
+    c100, _ = counts_for(scene, 100, alg)
+    c256, _ = counts_for(scene, 256, alg)
+    assert c64 == c100 == c256, (alg, c64, c100, c256)
+
+
+def test_counts_positive_per_algorithm():
+    scene = synthetic_scene(220, 220, seed=1)
+    cfg = DifetConfig(tile=128, halo=24, max_keypoints_per_tile=64)
+    b = tile_scene(scene, cfg)
+    for alg in PAPER_ALGORITHMS:
+        r = jax.jit(lambda t, h, a=alg: extract_features(t, h, a, cfg))(
+            b.tiles, b.headers)
+        assert int(r["total_count"]) > 0, alg
+        assert bool(np.isfinite(np.asarray(r["top_scores"])).all()), alg
+
+
+def test_keypoint_coordinates_in_bounds():
+    scene = synthetic_scene(150, 260, seed=2)
+    _, r = counts_for(scene, 100, "harris")
+    ys = np.asarray(r["top_ys"])[np.asarray(r["top_valid"])]
+    xs = np.asarray(r["top_xs"])[np.asarray(r["top_valid"])]
+    assert ys.min() >= 0 and ys.max() < 150
+    assert xs.min() >= 0 and xs.max() < 260
+
+
+def test_descriptor_shapes_and_norms():
+    scene = synthetic_scene(200, 200, seed=3)
+    cfg = DifetConfig(tile=128, halo=24, max_keypoints_per_tile=32)
+    b = tile_scene(scene, cfg)
+    r = jax.jit(lambda t, h: extract_features(t, h, "sift", cfg))(
+        b.tiles, b.headers)
+    desc = np.asarray(r["top_desc"])
+    valid = np.asarray(r["top_valid"])
+    assert desc.shape[-1] == 128
+    if valid.any():
+        norms = np.linalg.norm(desc[valid], axis=-1)
+        assert np.all(norms < 1.5)
+        assert np.all(norms > 0.1)
+    r2 = jax.jit(lambda t, h: extract_features(t, h, "orb", cfg))(
+        b.tiles, b.headers)
+    assert np.asarray(r2["top_desc"]).dtype == np.uint32
+    assert np.asarray(r2["top_desc"]).shape[-1] == 8   # 256 bits
+
+
+def test_rgba_conversion_and_bundle_roundtrip(tmp_path):
+    rgba = synthetic_scene_rgba(120, 140, seed=0)
+    gray = rgba_to_gray(rgba)
+    assert gray.shape == (120, 140) and gray.dtype == np.float32
+    assert 0.0 <= gray.min() and gray.max() <= 1.0
+    cfg = DifetConfig(tile=64, halo=16)
+    bundle = bundle_scenes([rgba], cfg)
+    store = BundleStore(tmp_path)
+    store.put("b0", bundle)
+    back = store.get("b0")
+    np.testing.assert_array_equal(back.tiles, bundle.tiles)
+    np.testing.assert_array_equal(back.headers, bundle.headers)
+    assert back.cfg.tile == 64
+
+
+def test_pad_to_multiple():
+    cfg = DifetConfig(tile=64, halo=16)
+    b = tile_scene(synthetic_scene(100, 100, 0), cfg)
+    n0 = len(b)
+    b2 = b.pad_to(n0 + 3)
+    assert len(b2) == n0 + 3
+    assert (b2.headers[n0:, 5] == 1).all()   # pad flag set
+    r = jax.jit(lambda t, h: extract_features(t, h, "harris", b2.cfg))(
+        b2.tiles, b2.headers)
+    r0 = jax.jit(lambda t, h: extract_features(t, h, "harris", b.cfg))(
+        b.tiles, b.headers)
+    assert int(r["total_count"]) == int(r0["total_count"])   # pads emit nothing

@@ -1,0 +1,106 @@
+"""Fault tolerance: job restart, checkpoint integrity, elastic rebalance."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.difet_paper import DifetConfig
+from repro.core.bundle import BundleStore, bundle_scenes
+from repro.core.job import DifetJob
+from repro.data.landsat import synthetic_scene
+
+
+def make_store(tmp_path, n_bundles=3):
+    cfg = DifetConfig(tile=64, halo=16, max_keypoints_per_tile=32)
+    store = BundleStore(tmp_path / "store")
+    for i in range(n_bundles):
+        store.put(f"b{i}", bundle_scenes(
+            [synthetic_scene(100, 120, seed=i)], cfg))
+    return store
+
+
+def test_job_restart_after_failure_resumes_and_matches(tmp_path):
+    store = make_store(tmp_path)
+    # uninterrupted reference
+    ref_store = make_store(tmp_path / "ref")
+    ref = DifetJob(ref_store, "harris").run()
+
+    job = DifetJob(store, "harris")
+    with pytest.raises(RuntimeError, match="simulated worker failure"):
+        job.run(simulate_failure_after=1)
+    # manifest committed exactly one bundle
+    m = json.loads(job.manifest_path.read_text())
+    assert sum(m["done"].values()) == 1
+    # restart (fresh object, as a new process would)
+    job2 = DifetJob(store, "harris")
+    summary = job2.run()
+    assert summary["bundles_done"] == 3
+    assert summary["grand_total"] == ref["grand_total"]
+    assert summary["counts"] == {f"b{i}": ref["counts"][f"b{i}"]
+                                 for i in range(3)}
+
+
+def test_job_shard_merge_matches_unsharded(tmp_path):
+    store = make_store(tmp_path, n_bundles=1)
+    j1 = DifetJob(store, "fast", shards_per_bundle=1,
+                  manifest_path=tmp_path / "m1.json")
+    j4 = DifetJob(store, "fast", shards_per_bundle=4,
+                  manifest_path=tmp_path / "m4.json")
+    s1 = j1.run()
+    # reset result by re-running with different manifest; results overwrite
+    s4 = j4.run()
+    assert s1["grand_total"] == s4["grand_total"]
+
+
+def test_job_rebalance_partitions_everything(tmp_path):
+    store = make_store(tmp_path, n_bundles=5)
+    job = DifetJob(store, "harris")
+    for n in (1, 2, 4):
+        parts = job.rebalance(n)
+        flat = sorted(b for p in parts for b in p)
+        assert flat == sorted(job.manifest.remaining)
+
+
+def test_checkpoint_corruption_detected(tmp_path):
+    cm = CheckpointManager(tmp_path)
+    state = {"w": jnp.arange(16, dtype=jnp.float32)}
+    cm.save(state, 1)
+    # corrupt the tensor file
+    d = tmp_path / "step_0000000001"
+    z = np.load(d / "tensors.npz")
+    data = {k: z[k].copy() for k in z.files}
+    data["w"][0] = 999.0
+    np.savez(d / "tensors.npz", **data)
+    with pytest.raises(IOError, match="corruption"):
+        cm.restore(jax.eval_shape(lambda: state))
+
+
+def test_checkpoint_elastic_restore_changes_sharding(tmp_path):
+    """Restore onto a different device layout (the elastic-scaling path)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import make_host_mesh
+    cm = CheckpointManager(tmp_path)
+    state = {"w": jnp.ones((8, 4), jnp.float32)}
+    cm.save(state, 1)
+    mesh = make_host_mesh()
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    restored, _ = cm.restore(jax.eval_shape(lambda: state), shardings=sh)
+    assert restored["w"].sharding == sh["w"]
+    np.testing.assert_array_equal(np.asarray(restored["w"]), 1.0)
+
+
+def test_train_resume_matches_uninterrupted(tmp_path):
+    """Checkpoint/restart must reproduce the uninterrupted loss trajectory
+    (deterministic data + state capture)."""
+    from repro.launch.train import main as train_main
+    base = ["--arch", "smollm-135m", "--reduced", "--batch", "2",
+            "--seq", "32", "--log-every", "100"]
+    full = train_main(base + ["--steps", "8"])
+    part = train_main(base + ["--steps", "4", "--ckpt-dir",
+                              str(tmp_path / "ck"), "--ckpt-every", "4"])
+    resumed = train_main(base + ["--steps", "8", "--ckpt-dir",
+                                 str(tmp_path / "ck"), "--resume"])
+    np.testing.assert_allclose(full[4:], resumed, rtol=1e-4, atol=1e-5)

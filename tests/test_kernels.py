@@ -1,0 +1,82 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode
+(deliverable c), plus interior-equality with the production detectors."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import detectors as D
+from repro.data.landsat import synthetic_scene
+from repro.kernels import ops, ref
+
+SHAPES = [(32, 128), (61, 200), (96, 96), (128, 257)]
+
+
+def scenes(h, w, n=2):
+    return jnp.asarray(np.stack([synthetic_scene(h, w, seed=i)
+                                 for i in range(n)]))
+
+
+@pytest.mark.parametrize("hw", SHAPES)
+@pytest.mark.parametrize("sigma", [1.0, 2.0])
+def test_harris_kernel_matches_ref(hw, sigma):
+    img = scenes(*hw)
+    a = ops.harris(img, k=0.04, sigma=sigma)
+    b = ref.harris(img, k=0.04, sigma=sigma)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-7)
+
+
+@pytest.mark.parametrize("hw", SHAPES[:2])
+def test_shi_tomasi_kernel_matches_ref(hw):
+    img = scenes(*hw)
+    a = ops.harris(img, shi_tomasi=True)
+    b = ref.harris(img, shi_tomasi=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-7)
+
+
+@pytest.mark.parametrize("hw", SHAPES)
+@pytest.mark.parametrize("sigma", [0.8, 1.6, 3.2])
+def test_blur_kernel_matches_ref(hw, sigma):
+    img = scenes(*hw)
+    a = ops.gaussian_blur(img, sigma)
+    b = ref.gaussian_blur(img, sigma)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("hw", SHAPES)
+@pytest.mark.parametrize("threshold", [0.05, 0.15])
+def test_fast_kernel_matches_ref(hw, threshold):
+    img = scenes(*hw)
+    a = ops.fast_score(img, threshold=threshold)
+    b = ref.fast_score(img, threshold=threshold)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_dtype_sweep(dtype):
+    img = scenes(48, 128).astype(dtype)
+    a = ops.harris(img)
+    assert a.dtype == jnp.float32         # response always fp32
+    assert bool(jnp.isfinite(a).all())
+
+
+def test_single_image_rank():
+    img = scenes(40, 130)[0]
+    assert ops.harris(img).shape == img.shape
+    assert ops.fast_score(img).shape == img.shape
+
+
+def test_pallas_matches_production_interior():
+    """Kernel path vs production jnp detectors agree on the tile interior
+    (border band may differ by padding convention — DESIGN.md §5)."""
+    img = scenes(96, 160)
+    m = 8   # > blur radius + 1
+    a = np.asarray(ops.harris(img))[:, m:-m, m:-m]
+    b = np.asarray(D.harris_response(img))[:, m:-m, m:-m]
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-7)
+    af = np.asarray(ops.fast_score(img, threshold=0.1))[:, m:-m, m:-m]
+    bf = np.asarray(D.fast_score(img, threshold=0.1))[:, m:-m, m:-m]
+    np.testing.assert_allclose(af, bf, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,56 @@
+"""Property-based tests (hypothesis) on NMS/top-K selection invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import nms
+
+arrays = st.integers(0, 10**6).map(
+    lambda seed: np.random.RandomState(seed).rand(24, 24).astype(np.float32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(arrays)
+def test_nms_keeps_local_maxima_only(a):
+    r = np.asarray(nms.nms3x3(jnp.asarray(a)))
+    kept = np.argwhere(r > 0)
+    for y, x in kept:
+        window = a[max(y - 1, 0):y + 2, max(x - 1, 0):x + 2]
+        assert a[y, x] >= window.max() - 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(arrays, st.floats(0.0, 1.0))
+def test_count_monotone_in_threshold(a, t):
+    mask = jnp.ones_like(jnp.asarray(a), bool)
+    c1 = int(nms.count_above(jnp.asarray(a), t, mask))
+    c2 = int(nms.count_above(jnp.asarray(a), min(t + 0.1, 1.0), mask))
+    assert c2 <= c1
+
+
+@settings(max_examples=25, deadline=None)
+@given(arrays, st.integers(1, 32))
+def test_topk_sorted_valid_above_threshold(a, k):
+    mask = jnp.ones_like(jnp.asarray(a), bool)
+    ys, xs, scores, valid = nms.topk_keypoints(jnp.asarray(a), k, 0.5, mask)
+    s = np.asarray(scores)
+    v = np.asarray(valid)
+    assert np.all(np.diff(s) <= 1e-6)           # sorted descending
+    assert np.all(s[v] > 0.5)                   # above threshold
+    assert np.all(s[~v] == 0.0)                 # invalid slots zeroed
+    yy, xx = np.asarray(ys)[v], np.asarray(xs)[v]
+    np.testing.assert_allclose(a[yy, xx], s[v], rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10**6), st.integers(1, 16))
+def test_merge_topk_equals_global_topk(seed, k):
+    rng = np.random.RandomState(seed)
+    sa, sb = rng.rand(k).astype(np.float32), rng.rand(k).astype(np.float32)
+    sa.sort(); sb.sort()
+    sa, sb = sa[::-1].copy(), sb[::-1].copy()
+    pa = {"i": np.arange(k, dtype=np.int32)}
+    pb = {"i": np.arange(k, 2 * k, dtype=np.int32)}
+    top, payload = nms.merge_topk(jnp.asarray(sa), pa, jnp.asarray(sb), pb, k)
+    expected = np.sort(np.concatenate([sa, sb]))[::-1][:k]
+    np.testing.assert_allclose(np.asarray(top), expected, rtol=1e-6)

@@ -1,0 +1,52 @@
+"""Prefill path: batch-chunked prefill must equal unchunked exactly."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+
+
+@pytest.mark.parametrize("arch", ["internlm2-1.8b", "dbrx-132b"])
+def test_chunked_prefill_matches_unchunked(arch):
+    cfg = get_config(arch).reduced().replace(remat="nothing")
+    if cfg.moe is not None:
+        # capacity-based MoE drops are batch-size-dependent; with ample
+        # capacity (no drops) chunked == unchunked must hold exactly
+        import dataclasses
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe,
+                                                  capacity_factor=16.0))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    tokens = jnp.asarray(rng.randint(0, cfg.vocab_size, (4, 16)), jnp.int32)
+    batch = {"tokens": tokens}
+
+    logits1, cache1 = jax.jit(model.prefill)(params, batch)
+    model.cfg = cfg.replace(prefill_chunks=2)
+    logits2, cache2 = jax.jit(model.prefill)(params, batch)
+
+    np.testing.assert_allclose(np.asarray(logits1), np.asarray(logits2),
+                               rtol=1e-4, atol=1e-4)
+    for a, b in zip(jax.tree_util.tree_leaves(cache1),
+                    jax.tree_util.tree_leaves(cache2)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            rtol=1e-4, atol=1e-4)
+
+
+def test_prefill_last_logits_match_forward():
+    cfg = get_config("internlm2-1.8b").reduced().replace(remat="nothing")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    tokens = jnp.asarray(np.random.RandomState(1).randint(
+        0, cfg.vocab_size, (2, 12)), jnp.int32)
+    logits_fwd, _ = jax.jit(model.forward)(params, {"tokens": tokens})
+    logits_pre, cache = jax.jit(model.prefill)(params, {"tokens": tokens})
+    np.testing.assert_allclose(np.asarray(logits_pre[:, 0]),
+                               np.asarray(logits_fwd[:, -1]),
+                               rtol=1e-3, atol=1e-3)
+    # cache covers the prompt
+    k = jax.tree_util.tree_leaves(cache)[0]
+    assert k.shape[2] == 12   # [L, B, S, ...]
