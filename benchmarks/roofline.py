@@ -57,6 +57,51 @@ def render_table(results, mesh_tag: str) -> str:
     return "\n".join(lines)
 
 
+def scalespace_hbm_table(tile_hw=(176, 304), scales_per_octave=3,
+                         sigma0=1.6) -> str:
+    """Analytic HBM traffic per tile per octave: the seed's level-by-level
+    SIFT path vs the fused scale-space kernel.
+
+    Counting convention (fp32 = 4 B/px): the seed path writes + re-reads
+    every materialized intermediate — each Gaussian level's two separable
+    passes, each DoG level, the 26-neighbour extrema stack over the mid
+    scales, and the response; the fused kernel DMAs the padded tile in
+    ONCE and writes only the response and the next-octave seed (no
+    per-level Gaussian materialization in the measured ratio).
+    """
+    from repro.kernels.ops import (scalespace_pad, scalespace_vmem_bytes,
+                                   scalespace_fits_vmem)
+    n_levels = scales_per_octave + 3
+    n_dogs = n_levels - 1
+    n_mid = n_dogs - 2
+    lines = [
+        "### Fused scale-space: HBM bytes per tile per octave "
+        f"(S={scales_per_octave}, sigma0={sigma0})",
+        "",
+        "| tile extent | seed level-by-level | fused kernel | ratio "
+        "| VMEM est. | fused on TPU? |",
+        "|---|---:|---:|---:|---:|---|",
+    ]
+    for hw in tile_hw:
+        px = hw * hw * 4
+        # seed: each blur pass writes+reads its output; DoG reads 2 levels,
+        # writes 1; the extrema stack materializes 26 neighbour maps per
+        # mid scale (read+write), then the response.
+        seed_b = px * (n_levels * 2 * 2      # 2 passes x (write + read)
+                       + n_dogs * 3          # DoG: 2 reads + 1 write
+                       + n_mid * 26 * 2      # neighbour stack
+                       + n_mid * 2 + 1)      # |mid|/threshold + response
+        p = scalespace_pad(scales_per_octave, sigma0)
+        fused_b = (hw + 2 * p) * (hw + 2 * p) * 4 + 2 * px   # in + 2 outs
+        vmem = scalespace_vmem_bytes(hw, hw, scales_per_octave, sigma0)
+        fits = scalespace_fits_vmem(hw, hw, scales_per_octave, sigma0)
+        lines.append(
+            f"| {hw}x{hw} | {seed_b / 2**20:.1f} MiB | "
+            f"{fused_b / 2**20:.2f} MiB | {seed_b / fused_b:.1f}x | "
+            f"{vmem / 2**20:.1f} MiB | {'yes' if fits else 'no (jnp path)'} |")
+    return "\n".join(lines)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun")
@@ -70,6 +115,8 @@ def main():
     for mesh_tag, results in sorted(by_mesh.items()):
         out.append(render_table(results, mesh_tag))
         out.append("")
+    out.append(scalespace_hbm_table())
+    out.append("")
     text = "\n".join(out)
     print(text)
     if args.markdown_out:

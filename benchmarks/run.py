@@ -64,6 +64,38 @@ def bench_kernels(quick):
     return out
 
 
+def bench_scalespace(quick):
+    """Fused scale-space vs the seed's level-by-level gaussian_pyramid path
+    (deliverable: >= 1.5x per tile, jit'd jnp on CPU), plus the Pallas
+    kernel's interpret-mode parity against the jnp oracle (atol=1e-5)."""
+    from repro.core import detectors as D
+    from repro.core.pyramid import blur_separable
+    from repro.data.landsat import synthetic_scene
+    from repro.kernels import ops, ref
+    n = 2 if quick else 4
+    hw = 176     # the engine's tile extent: tile 128 + 2*24 halo
+    img = jnp.asarray(np.stack([synthetic_scene(hw, hw, i)
+                                for i in range(n)]))
+    fused = jax.jit(lambda x: D.sift_dog_response(x)[0])
+    seed = jax.jit(lambda x: D.sift_dog_response_levelwise(x)[0])
+    t_fused = _bench(fused, img)
+    t_seed = _bench(seed, img)
+    # Pallas fused-octave kernel vs oracle (interpret mode on CPU)
+    base = blur_separable(img, 1.6)
+    ra, sa = ops.scalespace_octave(base, scales_per_octave=3,
+                                   contrast_threshold=0.04 / 3)
+    rb, sb = ref.scalespace_octave(base, scales_per_octave=3,
+                                   contrast_threshold=0.04 / 3)
+    ok = (bool(np.allclose(np.asarray(ra), np.asarray(rb), atol=1e-5))
+          and bool(np.allclose(np.asarray(sa), np.asarray(sb), atol=1e-5)))
+    return [
+        ("scalespace/fused", t_fused,
+         f"speedup_vs_seed={t_seed / t_fused:.2f};pallas_allclose={ok}"),
+        ("scalespace/seed_levelwise", t_seed,
+         f"us_per_tile={t_seed / n:.1f}"),
+    ]
+
+
 def bench_lm_step(quick):
     from repro.configs import get_config
     from repro.models import build_model
@@ -106,15 +138,45 @@ def bench_roofline(quick):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", action="store_true",
+                    help="also write a BENCH_<rev>.json snapshot so the "
+                         "perf trajectory is tracked per PR")
     args, _ = ap.parse_known_args()
+    rows = []
+    failed = False
     print("name,us_per_call,derived")
     for section in (bench_table2, bench_table1, bench_kernels,
-                    bench_lm_step, bench_roofline):
+                    bench_scalespace, bench_lm_step, bench_roofline):
         try:
             for name, us, derived in section(args.quick):
+                rows.append((name, us, derived))
                 print(f"{name},{us:.1f},{derived}")
+                if "allclose=False" in derived:
+                    failed = True
         except Exception as e:  # noqa: BLE001
+            rows.append((section.__name__, 0.0, f"ERROR={e!r}"))
             print(f"{section.__name__},0,ERROR={e!r}")
+            failed = True
+    if args.json:
+        import json
+        import subprocess
+        try:
+            rev = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                                 capture_output=True, text=True,
+                                 check=True).stdout.strip()
+        except Exception:  # noqa: BLE001
+            rev = "unknown"
+        path = f"BENCH_{rev}.json"
+        with open(path, "w") as f:
+            json.dump({"rev": rev, "quick": args.quick,
+                       "rows": [{"name": n, "us_per_call": us,
+                                 "derived": d} for n, us, d in rows]},
+                      f, indent=1)
+        print(f"# wrote {path}")
+    if failed:
+        # a section crashed or a kernel-vs-oracle parity check came back
+        # False — make the CI step actually fail
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

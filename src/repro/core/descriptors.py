@@ -19,15 +19,23 @@ from repro.core.pyramid import blur_separable, sobel_gradients
 
 def extract_patches(img, ys, xs, size: int):
     """img [H,W]; ys,xs [K] (patch centers) -> patches [K, size, size].
-    Start indices clip so patches near borders stay in-bounds."""
+    Start indices clip so patches near borders stay in-bounds.
+
+    One batched gather with precomputed flat indices instead of K vmapped
+    ``dynamic_slice`` calls: the K sequential slices become a single
+    ``jnp.take``, shared by the SIFT/SURF/BRIEF/ORB descriptor stages
+    (DESIGN.md §5).  Start-index clipping matches the dynamic_slice clamp,
+    so values are identical.
+    """
+    h, w = img.shape
     half = size // 2
-
-    def one(y, x):
-        y0 = jnp.clip(y - half, 0, img.shape[0] - size)
-        x0 = jnp.clip(x - half, 0, img.shape[1] - size)
-        return jax.lax.dynamic_slice(img, (y0, x0), (size, size))
-
-    return jax.vmap(one)(ys, xs)
+    y0 = jnp.clip(ys - half, 0, h - size)                   # [K]
+    x0 = jnp.clip(xs - half, 0, w - size)
+    d = jnp.arange(size)
+    rows = y0[:, None] + d[None, :]                         # [K, size]
+    cols = x0[:, None] + d[None, :]
+    flat = rows[:, :, None] * w + cols[:, None, :]          # [K, size, size]
+    return jnp.take(img.reshape(-1), flat, axis=0)
 
 
 # ---------------------------------------------------------------------------

@@ -19,8 +19,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.pyramid import (
-    blur_separable, sobel_gradients, gaussian_pyramid, dog_pyramid,
-    integral_image, box_sum,
+    blur_separable, blur_separable_seed, sobel_gradients, gaussian_pyramid,
+    dog_pyramid, downsample2, fused_octave_response, integral_image, box_sum,
 )
 
 
@@ -122,9 +122,37 @@ def sift_dog_response(img, n_octaves=4, scales_per_octave=3,
                       contrast_threshold=0.04, use_pallas: bool = False):
     """Returns the octave-0 extrema response map [..., H, W] (full-res) plus
     per-octave responses; response = |DoG| where the pixel is a 3x3x3
-    scale-space extremum above the contrast threshold, else 0."""
+    scale-space extremum above the contrast threshold, else 0.
+
+    Consumes the fused extrema map from ``fused_octave_response`` directly:
+    per octave, one fused computation (a single Pallas DMA on TPU) yields
+    the response and the next octave's seed level — no Gaussian/DoG pyramid
+    is materialized.  Matches the level-by-level path
+    (``sift_dog_response_levelwise``, kept for benchmarks) to ~2 ulp with
+    identical thresholded detection masks (Table-2 counts unchanged).
+    """
+    base = blur_separable(img, 1.6, use_pallas)
+    responses = []
+    for o in range(n_octaves):
+        resp, seed = fused_octave_response(
+            base, scales_per_octave, contrast_threshold,
+            use_pallas=use_pallas)
+        responses.append(resp)
+        base = downsample2(seed)
+    return responses
+
+
+def sift_dog_response_levelwise(img, n_octaves=4, scales_per_octave=3,
+                                contrast_threshold=0.04,
+                                use_pallas: bool = False):
+    """The seed's level-by-level SIFT path (gaussian_pyramid -> dog_pyramid
+    -> 26-neighbour stack).  Kept as the reference baseline that benchmarks
+    (`benchmarks/run.py::bench_scalespace`) and equivalence tests compare the
+    fused path against; not used by the engine.  Uses the seed blur
+    formulation so the timing baseline is the seed's, not just its math."""
     octs = gaussian_pyramid(img, n_octaves, scales_per_octave,
-                            use_pallas=use_pallas)
+                            use_pallas=use_pallas,
+                            blur_fn=blur_separable_seed)
     dogs = dog_pyramid(octs)
     responses = []
     for d in dogs:                                          # [..., S, H, W]
@@ -159,7 +187,14 @@ def surf_hessian_response(img, use_pallas: bool = False):
 
     Dxx: lobes 5(h) x 3(w); weights (1, -2, 1); Dyy transposed; Dxy four
     3x3 corner boxes with weights (+1, -1, -1, +1).
+
+    ``use_pallas`` is accepted for a uniform detector signature but the
+    integral-image path is *pallas-exempt* (DESIGN.md §6): the summed-area
+    table is two cumsums + 8 gathers — already a single memory-bound sweep
+    with no per-level rebuild to fuse, and ``jnp.cumsum`` lowers to an
+    efficient scan that a hand-written kernel would not beat.
     """
+    del use_pallas  # integral-image path is pallas-exempt (see docstring)
     ii = integral_image(img)
     # Dxx: three vertical-stacked boxes of 5x3 centered
     dxx = (box_sum(ii, -2, -4, 5, 3) - 2 * box_sum(ii, -2, -1, 5, 3)

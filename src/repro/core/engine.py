@@ -51,6 +51,9 @@ def _fast_resp(img, cfg, use_pallas):
 def _sift_resp(img, cfg, use_pallas):
     # octave-0 (full-res) extrema map drives keypoints.  OpenCV divides the
     # nominal contrast threshold by scales_per_octave — mirror that.
+    # Routed through the fused scale-space path: one fused octave
+    # computation (a single Pallas DMA on TPU) instead of a per-level
+    # pyramid.
     return D.sift_dog_response(
         img, cfg.n_octaves, cfg.scales_per_octave,
         cfg.sift_contrast_threshold / cfg.scales_per_octave,
@@ -58,7 +61,7 @@ def _sift_resp(img, cfg, use_pallas):
 
 
 def _surf_resp(img, cfg, use_pallas):
-    return D.surf_hessian_response(img)
+    return D.surf_hessian_response(img, use_pallas=use_pallas)
 
 
 # paper thresholds are on 8-bit images; ours are [0,1] — rescale where the
@@ -80,13 +83,11 @@ ALGORITHMS: Dict[str, AlgorithmSpec] = {
 }
 
 
-def extract_tile(algorithm: str, cfg: DifetConfig, tile, header,
-                 use_pallas: bool = False):
-    """The DIFET 'map function' for one tile (cf. the paper's pseudo-code:
-    convert → grayscale → detect → describe → emit).  Returns a dict of
-    fixed-shape features."""
-    spec = ALGORITHMS[algorithm]
-    resp = spec.response(tile, cfg, use_pallas)
+def _select_and_describe(spec: AlgorithmSpec, cfg: DifetConfig, tile, header,
+                         resp):
+    """NMS → capacity-K selection → describe, given a precomputed response
+    map.  Factored out of ``extract_tile`` so algorithms sharing a response
+    (fast/brief/orb all use the FAST score) compute it once."""
     thr = spec.threshold(cfg)
     valid_h, valid_w = header[3], header[4]
     not_pad = header[5] == 0
@@ -106,14 +107,34 @@ def extract_tile(algorithm: str, cfg: DifetConfig, tile, header,
     return out
 
 
-def extract_features(bundle_tiles, bundle_headers, algorithm: str,
-                     cfg: DifetConfig, use_pallas: bool = False):
-    """vmapped map over tiles + the reduce: total count and global top-K."""
-    per_tile = jax.vmap(
-        functools.partial(extract_tile, algorithm, cfg,
-                          use_pallas=use_pallas))(
-        bundle_tiles, bundle_headers)
-    # ---- reduce ------------------------------------------------------------
+def extract_tile(algorithm: str, cfg: DifetConfig, tile, header,
+                 use_pallas: bool = False):
+    """The DIFET 'map function' for one tile (cf. the paper's pseudo-code:
+    convert → grayscale → detect → describe → emit).  Returns a dict of
+    fixed-shape features."""
+    spec = ALGORITHMS[algorithm]
+    resp = spec.response(tile, cfg, use_pallas)
+    return _select_and_describe(spec, cfg, tile, header, resp)
+
+
+def extract_tile_multi(algorithms, cfg: DifetConfig, tile, header,
+                       use_pallas: bool = False):
+    """Per-tile map for several algorithms at once, computing each distinct
+    response function ONCE: ``fast``/``brief``/``orb`` share the FAST score
+    map instead of recomputing it thrice.  Returns {algorithm: features}."""
+    resp_cache = {}
+    out = {}
+    for alg in algorithms:
+        spec = ALGORITHMS[alg]
+        if spec.response not in resp_cache:
+            resp_cache[spec.response] = spec.response(tile, cfg, use_pallas)
+        out[alg] = _select_and_describe(spec, cfg, tile, header,
+                                        resp_cache[spec.response])
+    return out
+
+
+def _reduce_features(per_tile):
+    """The reduce: total count all-reduce + global top-K merge."""
     total = per_tile["count"].sum()
     t, k = per_tile["scores"].shape
     flat_scores = per_tile["scores"].reshape(t * k)
@@ -133,6 +154,31 @@ def extract_features(bundle_tiles, bundle_headers, algorithm: str,
     if "desc" in per_tile:
         result["top_desc"] = gather(per_tile["desc"])
     return result
+
+
+def extract_features(bundle_tiles, bundle_headers, algorithm: str,
+                     cfg: DifetConfig, use_pallas: bool = False):
+    """vmapped map over tiles + the reduce: total count and global top-K."""
+    per_tile = jax.vmap(
+        functools.partial(extract_tile, algorithm, cfg,
+                          use_pallas=use_pallas))(
+        bundle_tiles, bundle_headers)
+    return _reduce_features(per_tile)
+
+
+def extract_features_multi(bundle_tiles, bundle_headers, algorithms,
+                           cfg: DifetConfig, use_pallas: bool = False):
+    """Multi-algorithm extraction with shared response maps: one vmapped map
+    computes every requested algorithm per tile (fast/brief/orb reuse a
+    single FAST score), then each algorithm gets its own reduce.  Returns
+    {algorithm: result} with per-algorithm results identical to
+    ``extract_features`` (same ops on the same inputs)."""
+    algorithms = tuple(algorithms)
+    per_tile = jax.vmap(
+        functools.partial(extract_tile_multi, algorithms, cfg,
+                          use_pallas=use_pallas))(
+        bundle_tiles, bundle_headers)
+    return {alg: _reduce_features(per_tile[alg]) for alg in algorithms}
 
 
 def make_distributed_extractor(algorithm: str, cfg: DifetConfig, mesh,

@@ -14,12 +14,27 @@ from jax import lax
 
 
 def nms3x3(resp):
-    """Keep values that are the strict max of their 3x3 neighbourhood."""
-    mx = lax.reduce_window(resp, -jnp.inf, lax.max,
-                           (1,) * (resp.ndim - 2) + (3, 3),
-                           (1,) * resp.ndim,
-                           "SAME")
-    return jnp.where(resp >= mx, resp, 0.0)
+    """Keep values that are the strict max of their 3x3 neighbourhood.
+
+    Response plateaus are tie-broken deterministically: among window pixels
+    equal to the window max, only the one with the smallest row-major flat
+    index survives, so a plateau emits at most one keypoint per 3x3 window
+    (the seed's ``resp >= mx`` emitted one at EVERY plateau pixel).
+    Regression: ``tests/test_nms_property.py::test_nms_plateau_tiebreak``.
+    """
+    win = (1,) * (resp.ndim - 2) + (3, 3)
+    strides = (1,) * resp.ndim
+    mx = lax.reduce_window(resp, -jnp.inf, lax.max, win, strides, "SAME")
+    h, w = resp.shape[-2:]
+    idx = (jnp.arange(h)[:, None] * w + jnp.arange(w)[None, :]).astype(
+        jnp.int32)
+    idx = jnp.broadcast_to(idx, resp.shape)
+    sentinel = jnp.iinfo(jnp.int32).max
+    # candidate = own index where the pixel attains its window max; the
+    # window-min over candidates is the canonical (smallest-index) claimant
+    cand = jnp.where(resp >= mx, idx, sentinel)
+    min_idx = lax.reduce_window(cand, sentinel, lax.min, win, strides, "SAME")
+    return jnp.where((resp >= mx) & (idx == min_idx), resp, 0.0)
 
 
 def interior_mask(shape_hw, halo: int, valid_h, valid_w):

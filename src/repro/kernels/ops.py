@@ -13,12 +13,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.pyramid import gaussian_kernel_1d
+from repro.core.pyramid import gaussian_kernel_1d, octave_increments
 from repro.kernels import harris as _harris
 from repro.kernels import blur as _blur
 from repro.kernels import fastscore as _fast
+from repro.kernels import scalespace as _scalespace
 
 LANE = 128
+# VMEM budget for the fused scale-space kernel: leave headroom below the
+# ~16 MiB v5e per-core VMEM for double-buffered DMA + compiler spill
+# (DESIGN.md §6).
+VMEM_BUDGET_BYTES = 12 * 2 ** 20
 
 
 def _interpret_default():
@@ -81,3 +86,59 @@ def fast_score(img, *, threshold: float = 0.15, arc: int = 9,
     out = _fast.fast_pallas(xp, threshold=threshold, arc=arc, h=h, w=wk,
                             interpret=interpret)
     return _crop(out, h, w, squeeze)
+
+
+def _scalespace_taps(scales_per_octave: int, sigma0: float):
+    """Compile-time incremental taps for one octave's levels 1..n_scales-1."""
+    return tuple(tuple(gaussian_kernel_1d(s).tolist())
+                 for s in octave_increments(scales_per_octave, sigma0))
+
+
+def scalespace_pad(scales_per_octave: int, sigma0: float = 1.6) -> int:
+    """One-DMA padding: cumulative blur radius + 1 for the extrema window."""
+    return sum((len(t) - 1) // 2
+               for t in _scalespace_taps(scales_per_octave, sigma0)) + 1
+
+
+def scalespace_vmem_bytes(h: int, w: int, scales_per_octave: int,
+                          sigma0: float = 1.6) -> int:
+    """Working-set estimate for the fused octave kernel: the padded input
+    slab plus ~(n_levels + n_dogs + 4) live level/DoG/stat slabs (fp32),
+    lane-aligned.  See DESIGN.md §6 for the budget table."""
+    p = scalespace_pad(scales_per_octave, sigma0)
+    wp = w + 2 * p
+    wp += (-wp) % LANE
+    slab = (h + 2 * p) * wp * 4
+    n_levels = scales_per_octave + 3
+    return (2 * n_levels + 2 + 4) * slab
+
+
+def scalespace_fits_vmem(h: int, w: int, scales_per_octave: int,
+                         sigma0: float = 1.6) -> bool:
+    return scalespace_vmem_bytes(h, w, scales_per_octave,
+                                 sigma0) <= VMEM_BUDGET_BYTES
+
+
+@functools.partial(jax.jit, static_argnames=("scales_per_octave",
+                                             "contrast_threshold", "sigma0",
+                                             "interpret"))
+def scalespace_octave(base, *, scales_per_octave: int,
+                      contrast_threshold: float, sigma0: float = 1.6,
+                      interpret: bool = None):
+    """Fused SIFT octave: (extrema response, next-octave seed level).
+
+    ``base`` [H,W] or [N,H,W], already blurred to ``sigma0`` (octave level
+    0).  One pallas_call computes the whole octave's Gaussian stack, DoG
+    differences and 3x3x3 extrema in VMEM; only the response and the seed
+    level are written back.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    taps_list = _scalespace_taps(scales_per_octave, float(sigma0))
+    p = sum((len(t) - 1) // 2 for t in taps_list) + 1
+    xp, h, w, squeeze = _prep(base, p)
+    wk = xp.shape[-1] - 2 * p
+    resp, seed = _scalespace.scalespace_pallas(
+        xp, taps_list=taps_list, h=h, w=wk,
+        seed_index=scales_per_octave,
+        contrast_threshold=float(contrast_threshold), interpret=interpret)
+    return _crop(resp, h, w, squeeze), _crop(seed, h, w, squeeze)

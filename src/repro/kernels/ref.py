@@ -12,7 +12,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.pyramid import gaussian_kernel_1d
+from repro.core.pyramid import gaussian_kernel_1d, octave_increments
 
 
 def _pad(img, r):
@@ -59,6 +59,46 @@ def gaussian_blur(img, sigma: float):
     taps = gaussian_kernel_1d(float(sigma))
     r = (len(taps) - 1) // 2
     return _blur_valid(_pad(img.astype(jnp.float32), r), taps, h, w)
+
+
+def scalespace_octave(base, *, scales_per_octave: int,
+                      contrast_threshold: float, sigma0: float = 1.6):
+    """Oracle for the fused scale-space kernel: same pad-once/valid-conv
+    convention, but the extrema use the naive 26-neighbour stack — an
+    independent formulation that cross-checks the kernel's decomposed
+    shifted-max chains.  Returns (resp [...,H,W], seed [...,H,W])."""
+    h, w = base.shape[-2:]
+    incs = octave_increments(scales_per_octave, float(sigma0))
+    taps_list = [gaussian_kernel_1d(s) for s in incs]
+    margin = sum((len(t) - 1) // 2 for t in taps_list) + 1
+    prev = _pad(base.astype(jnp.float32), margin)
+    dogs, seed = [], None                        # dogs: (slab, margin)
+    for s, taps in enumerate(taps_list, start=1):
+        r = (len(taps) - 1) // 2
+        m = margin - r
+        cur = _blur_valid(prev, taps, h + 2 * m, w + 2 * m)
+        dogs.append((cur - prev[..., r:r + h + 2 * m, r:r + w + 2 * m], m))
+        if s == scales_per_octave:
+            seed = cur[..., m:m + h, m:m + w]
+        prev, margin = cur, m
+    # align every DoG slab on the margin-1 extent, stack over scale
+    d = jnp.stack([dg[..., m - 1:m - 1 + h + 2, m - 1:m - 1 + w + 2]
+                   for dg, m in dogs], axis=-3)
+    s_dim = d.shape[-3]
+    mid = d[..., 1:s_dim - 1, 1:h + 1, 1:w + 1]
+    neigh = []
+    for ds in (-1, 0, 1):
+        for dy in (-1, 0, 1):
+            for dx in (-1, 0, 1):
+                if ds == 0 and dy == 0 and dx == 0:
+                    continue
+                neigh.append(d[..., 1 + ds:1 + ds + s_dim - 2,
+                               1 + dy:1 + dy + h, 1 + dx:1 + dx + w])
+    neigh = jnp.stack(neigh, axis=0)
+    is_ext = (mid > neigh.max(axis=0)) | (mid < neigh.min(axis=0))
+    resp = jnp.where(is_ext & (jnp.abs(mid) > contrast_threshold),
+                     jnp.abs(mid), 0.0).max(axis=-3)
+    return resp, seed
 
 
 def fast_score(img, *, threshold: float = 0.15, arc: int = 9):

@@ -68,6 +68,80 @@ def test_descriptor_shapes_and_norms():
     assert np.asarray(r2["top_desc"]).shape[-1] == 8   # 256 bits
 
 
+def test_extract_features_fused_equals_seed():
+    """The fused SIFT path and the batched-gather patch extraction must not
+    change extraction results: compare `sift`/`brief`/`orb` against the
+    seed formulations (level-by-level SIFT response; vmapped dynamic_slice
+    patches), field by field."""
+    import jax.numpy as jnp
+    from repro.core import descriptors as DS
+    from repro.core import detectors as D
+    from repro.core import engine
+
+    scene = synthetic_scene(220, 220, seed=4)
+    cfg = DifetConfig(tile=128, halo=24, max_keypoints_per_tile=64)
+    b = tile_scene(scene, cfg)
+
+    def assert_same(ra, rb, tag):
+        assert set(ra) == set(rb), tag
+        for key in ra:
+            a, b = np.asarray(ra[key]), np.asarray(rb[key])
+            if a.dtype.kind == "f":
+                # float scores/descriptors may differ by ~2 ulp between the
+                # two formulations (XLA FMA contraction is shape-dependent)
+                np.testing.assert_allclose(a, b, rtol=3e-7, atol=3e-7,
+                                           err_msg=f"{tag}/{key}")
+            else:
+                # counts, positions, validity, packed bits: exact
+                np.testing.assert_array_equal(a, b, err_msg=f"{tag}/{key}")
+
+    # --- sift: fused octave path vs seed level-by-level response ----------
+    def _sift_resp_seed(img, c, use_pallas):
+        return D.sift_dog_response_levelwise(
+            img, c.n_octaves, c.scales_per_octave,
+            c.sift_contrast_threshold / c.scales_per_octave,
+            use_pallas=use_pallas)[0]
+
+    r_fused = extract_features(b.tiles, b.headers, "sift", cfg)
+    seed_spec = engine.ALGORITHMS["sift"]._replace(response=_sift_resp_seed)
+    orig = engine.ALGORITHMS["sift"]
+    try:
+        engine.ALGORITHMS["sift"] = seed_spec
+        r_seed = extract_features(b.tiles, b.headers, "sift", cfg)
+    finally:
+        engine.ALGORITHMS["sift"] = orig
+    assert_same(r_fused, r_seed, "sift")
+
+    # --- brief/orb: batched-gather patches vs vmapped dynamic_slice -------
+    def patches_seed(img, ys, xs, size):
+        half = size // 2
+
+        def one(y, x):
+            y0 = jnp.clip(y - half, 0, img.shape[0] - size)
+            x0 = jnp.clip(x - half, 0, img.shape[1] - size)
+            return jax.lax.dynamic_slice(img, (y0, x0), (size, size))
+        return jax.vmap(one)(ys, xs)
+
+    img = jnp.asarray(scene)
+    rng = np.random.RandomState(0)
+    ys = jnp.asarray(rng.randint(0, 220, size=32).astype(np.int32))
+    xs = jnp.asarray(rng.randint(0, 220, size=32).astype(np.int32))
+    for size in (18, 31, 45):   # covers sift/brief and orb's rotation margin
+        np.testing.assert_array_equal(
+            np.asarray(DS.extract_patches(img, ys, xs, size)),
+            np.asarray(patches_seed(img, ys, xs, size)), err_msg=str(size))
+
+    # --- multi-path (shared FAST response) == per-algorithm extraction ----
+    from repro.core.engine import extract_features_multi
+    algs = ("sift", "fast", "brief", "orb")
+    multi = jax.jit(lambda t, h: extract_features_multi(t, h, algs, cfg))(
+        b.tiles, b.headers)
+    for alg in algs:
+        single = jax.jit(lambda t, h, a=alg: extract_features(t, h, a, cfg))(
+            b.tiles, b.headers)
+        assert_same(multi[alg], single, alg)
+
+
 def test_rgba_conversion_and_bundle_roundtrip(tmp_path):
     rgba = synthetic_scene_rgba(120, 140, seed=0)
     gray = rgba_to_gray(rgba)
