@@ -1,0 +1,85 @@
+"""Descriptor-matcher micro-benchmark (Hamming vs L2, production vs oracle).
+
+Times the production matcher formulation (`kernels/matcher.best2_scan`: the
+packed-word SWAR-popcount / dot-expansion chunked scan — exactly what the
+Pallas kernel runs per query block) against the naive jnp oracle
+(`kernels/ref.match_best2`: bit-unpacked Hamming / full-matrix L2), and
+checks Pallas-kernel parity in interpret mode (Hamming must be
+bit-identical; interpret-mode wall time itself is not meaningful perf,
+same reporting convention as ``bench_scalespace``).
+
+Default sizes are the extraction defaults: 256-bit packed BRIEF/ORB words
+and 128-d SIFT floats over a scene's top-K set.
+
+    PYTHONPATH=src python -m benchmarks.run --quick      # CI entry
+    PYTHONPATH=src python -m benchmarks.bench_matcher    # standalone
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.run import _bench
+
+
+def make_descriptors(n: int, seed: int, metric: str):
+    rng = np.random.RandomState(seed)
+    if metric == "hamming":       # 256-bit BRIEF/ORB: 8 packed uint32 words
+        return jnp.asarray(rng.randint(0, 2 ** 32, size=(n, 8),
+                                       dtype=np.uint64).astype(np.uint32))
+    d = rng.randn(n, 128).astype(np.float32)    # 128-d SIFT
+    return jnp.asarray(d / np.linalg.norm(d, axis=-1, keepdims=True))
+
+
+def run(quick: bool = False):
+    from repro.kernels import ops, ref
+    n = 256 if quick else 512
+    rows = []
+    for metric in ("hamming", "l2"):
+        q = make_descriptors(n, 0, metric)
+        db = make_descriptors(n, 1, metric)
+        valid = jnp.ones((n,), jnp.bool_)
+        prod = jax.jit(lambda q, d, v, m=metric:
+                       ops.match_best2(q, d, v, metric=m))
+        orac = jax.jit(lambda q, d, v, m=metric:
+                       ref.match_best2(q, d, v, metric=m))
+        t_prod = _bench(prod, q, db, valid)
+        t_orac = _bench(orac, q, db, valid)
+        a = [np.asarray(x) for x in prod(q, db, valid)]
+        b = [np.asarray(x) for x in orac(q, db, valid)]
+        p = [np.asarray(x) for x in ops.match_best2(
+            q, db, valid, metric=metric, use_pallas=True, interpret=True)]
+        if metric == "hamming":   # integer distances: all three bit-identical
+            ok = (all(np.array_equal(x, y) for x, y in zip(a, b))
+                  and all(np.array_equal(x, y) for x, y in zip(p, b)))
+        else:
+            ok = (np.allclose(a[0], b[0], rtol=1e-5, atol=1e-4)
+                  and np.allclose(p[0], b[0], rtol=1e-5, atol=1e-4)
+                  and np.array_equal(a[2], b[2])
+                  and np.array_equal(p[2], b[2]))
+        pairs_per_s = n * n / (t_prod * 1e-6)
+        rows.append((f"matcher/{metric}", t_prod,
+                     f"speedup_vs_oracle={t_orac / t_prod:.2f};"
+                     f"pallas_allclose={ok};pairs_per_s={pairs_per_s:.3e}"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    failed = False
+    print("name,us_per_call,derived")
+    for name, us, derived in run(args.quick):
+        print(f"{name},{us:.1f},{derived}")
+        if "allclose=False" in derived:
+            failed = True
+    if failed:                    # kernel-vs-oracle parity is a CI gate
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

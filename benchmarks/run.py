@@ -96,6 +96,13 @@ def bench_scalespace(quick):
     ]
 
 
+def bench_matcher(quick):
+    """Matcher: production packed/dot path vs naive oracle + Pallas parity
+    (non-zero exit on parity failure via the allclose gate below)."""
+    from benchmarks.bench_matcher import run
+    return run(quick)
+
+
 def bench_lm_step(quick):
     from repro.configs import get_config
     from repro.models import build_model
@@ -146,7 +153,8 @@ def main() -> None:
     failed = False
     print("name,us_per_call,derived")
     for section in (bench_table2, bench_table1, bench_kernels,
-                    bench_scalespace, bench_lm_step, bench_roofline):
+                    bench_scalespace, bench_matcher, bench_lm_step,
+                    bench_roofline):
         try:
             for name, us, derived in section(args.quick):
                 rows.append((name, us, derived))

@@ -5,4 +5,8 @@ from repro.core.engine import (  # noqa: F401
     extract_features, extract_features_multi, make_distributed_extractor,
     ALGORITHMS,
 )
-from repro.core.job import DifetJob, JobManifest  # noqa: F401
+from repro.core.job import DifetJob, JobManifest, ManifestJob  # noqa: F401
+from repro.core.matching import (  # noqa: F401
+    match_pair, register_pair, estimate_translation, estimate_similarity,
+)
+from repro.core.mosaic import MatchPhase, solve_layout  # noqa: F401

@@ -91,18 +91,33 @@ def bundle_scenes(scenes: Sequence[np.ndarray], cfg: DifetConfig) -> TileBundle:
         cfg)
 
 
+def _atomic_savez(path: Path, **arrays) -> None:
+    """Crash-safe npz write: savez into a sibling ``<name>.tmp``, then
+    atomically ``Path.replace`` it over the target (the same protocol as
+    ``DifetJob._commit``).  A writer dying mid-write leaves only an
+    invisible ``*.npz.tmp`` — never a truncated ``.npz`` that would poison
+    every subsequent restart of a checkpointed job."""
+    tmp = path.with_name(path.name + ".tmp")
+    with open(tmp, "wb") as f:
+        np.savez_compressed(f, **arrays)
+    tmp.replace(path)
+
+
 class BundleStore:
     """Pluggable bundle storage (the HDFS stand-in): local npz files + a
-    JSON index.  Used by DifetJob for checkpointed, restartable jobs."""
+    JSON index.  Used by DifetJob for checkpointed, restartable jobs.
+    All writes are atomic (tmp + rename); ``list()``/``has_result`` only
+    ever see fully-committed files (``*.npz.tmp`` leftovers are invisible
+    and get overwritten by the retry)."""
 
     def __init__(self, root):
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
 
     def put(self, name: str, bundle: TileBundle) -> None:
-        np.savez_compressed(self.root / f"{name}.npz",
-                            tiles=bundle.tiles, headers=bundle.headers,
-                            cfg=json.dumps(dataclasses.asdict(bundle.cfg)))
+        _atomic_savez(self.root / f"{name}.npz",
+                      tiles=bundle.tiles, headers=bundle.headers,
+                      cfg=json.dumps(dataclasses.asdict(bundle.cfg)))
 
     def get(self, name: str) -> TileBundle:
         z = np.load(self.root / f"{name}.npz", allow_pickle=False)
@@ -115,7 +130,7 @@ class BundleStore:
                       if not p.name.endswith(".result.npz"))
 
     def put_result(self, name: str, result: Dict[str, np.ndarray]) -> None:
-        np.savez_compressed(self.root / f"{name}.result.npz", **result)
+        _atomic_savez(self.root / f"{name}.result.npz", **result)
 
     def has_result(self, name: str) -> bool:
         return (self.root / f"{name}.result.npz").exists()

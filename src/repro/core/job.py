@@ -1,14 +1,17 @@
-"""DifetJob: fault-tolerant, restartable feature-extraction jobs.
-
-The Hadoop JobTracker's roles map to:
-  * task re-execution on failure  → a JSON manifest with a processed-bundle
-    bitmap; on restart, only missing bundles are (deterministically)
+"""Checkpointed, restartable jobs: the Hadoop JobTracker's roles map to:
+  * task re-execution on failure  → a JSON manifest with a processed-item
+    bitmap; on restart, only missing items are (deterministically)
     re-executed — results are bit-identical, so re-execution is safe.
   * speculative execution for stragglers → over-decomposition: each bundle
     is split into ``shards_per_bundle`` independent shards; a shard that
     dies mid-flight only forfeits its own tiles.  On membership change
-    (elastic scaling) the outstanding shard queue is re-balanced across the
+    (elastic scaling) the outstanding work queue is re-balanced across the
     new worker set — no global restart.
+
+``ManifestJob`` is the generic machinery (manifest + atomic commit + resume
+loop); ``DifetJob`` is the extraction phase over bundles, and the stitching
+workload's pairwise-registration phase (`core/mosaic.py::MatchPhase`)
+reuses the same machinery for its match manifest.
 """
 from __future__ import annotations
 
@@ -16,18 +19,18 @@ import dataclasses
 import json
 import time
 from pathlib import Path
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.core.bundle import BundleStore, TileBundle
-from repro.core.engine import extract_features
+from repro.core.engine import extract_features, extract_features_multi
 
 
 @dataclasses.dataclass
 class JobManifest:
-    algorithm: str
-    bundle_names: List[str]
+    algorithm: str                  # job name (extraction: algorithm string)
+    bundle_names: List[str]         # work-item names, in execution order
     done: Dict[str, bool]
     started_at: float
     shards_per_bundle: int = 4
@@ -44,31 +47,33 @@ class JobManifest:
         return [b for b in self.bundle_names if not self.done.get(b)]
 
 
-class DifetJob:
-    """Checkpointed distributed extraction over a BundleStore.
+class ManifestJob:
+    """Checkpointed work queue over named items.
 
     ``run()`` is restartable: it consults the manifest, processes only
-    missing bundles, and fsyncs the manifest after each bundle — the
-    MapReduce "task commit" analogue.  ``simulate_failure_after`` kills the
-    job after N bundles (used by the fault-tolerance tests).
+    missing items via ``process(name)`` (subclass hook), and commits the
+    manifest write-tmp-then-rename after each item — the MapReduce "task
+    commit" analogue.  ``simulate_failure_after`` kills the job after N
+    items (used by the fault-tolerance tests).
     """
 
-    def __init__(self, store: BundleStore, algorithm: str,
-                 manifest_path=None, shards_per_bundle: int = 4,
-                 extractor: Optional[Callable] = None):
+    def __init__(self, store: BundleStore, job_name: str,
+                 items: Optional[Sequence[str]] = None, manifest_path=None,
+                 shards_per_bundle: int = 4):
         self.store = store
-        self.algorithm = algorithm
+        self.job_name = job_name
         self.manifest_path = Path(manifest_path or
-                                  store.root / f"{algorithm}.manifest.json")
+                                  store.root / f"{job_name}.manifest.json")
         self.shards_per_bundle = shards_per_bundle
-        self.extractor = extractor
+        self._items = items
         self.manifest = self._load_or_create()
 
     def _load_or_create(self) -> JobManifest:
         if self.manifest_path.exists():
             return JobManifest.from_json(self.manifest_path.read_text())
-        names = self.store.list()
-        m = JobManifest(self.algorithm, names, {n: False for n in names},
+        names = (list(self._items) if self._items is not None
+                 else self.store.list())
+        m = JobManifest(self.job_name, names, {n: False for n in names},
                         time.time(), self.shards_per_bundle)
         self._commit(m)
         return m
@@ -78,30 +83,14 @@ class DifetJob:
         tmp.write_text(manifest.to_json())
         tmp.replace(self.manifest_path)      # atomic manifest update
 
-    def _shards(self, bundle: TileBundle) -> List[TileBundle]:
-        """Over-decomposition for straggler mitigation: split tiles into
-        independent shards so slow/failed work is bounded per shard."""
-        n = max(1, min(self.shards_per_bundle, len(bundle)))
-        splits = np.array_split(np.arange(len(bundle)), n)
-        return [TileBundle(bundle.tiles[s], bundle.headers[s], bundle.cfg)
-                for s in splits if len(s)]
-
-    def _extract(self, tiles, headers, cfg):
-        if self.extractor is not None:
-            return self.extractor(tiles, headers)
-        return extract_features(tiles, headers, self.algorithm, cfg)
+    def process(self, name: str) -> None:
+        raise NotImplementedError
 
     def run(self, simulate_failure_after: Optional[int] = None,
             progress: Optional[Callable[[str], None]] = None) -> Dict:
         processed = 0
         for name in list(self.manifest.remaining):
-            bundle = self.store.get(name)
-            partials = []
-            for shard in self._shards(bundle):
-                r = self._extract(shard.tiles, shard.headers, bundle.cfg)
-                partials.append({k: np.asarray(v) for k, v in r.items()})
-            merged = self._merge(partials)
-            self.store.put_result(f"{name}.{self.algorithm}", merged)
+            self.process(name)
             self.manifest.done[name] = True
             self._commit(self.manifest)
             processed += 1
@@ -111,6 +100,73 @@ class DifetJob:
                     and processed >= simulate_failure_after:
                 raise RuntimeError(f"simulated worker failure after {name}")
         return self.summary()
+
+    def summary(self) -> Dict:
+        done = [n for n, d in self.manifest.done.items() if d]
+        return {"job": self.job_name, "bundles_done": len(done),
+                "bundles_total": len(self.manifest.bundle_names)}
+
+    # ---- elastic scaling ----------------------------------------------------
+    def rebalance(self, n_workers: int) -> List[List[str]]:
+        """Partition outstanding items across a (new) worker count —
+        called on membership change; returns per-worker work lists."""
+        rem = self.manifest.remaining
+        return [rem[i::n_workers] for i in range(n_workers)]
+
+
+class DifetJob(ManifestJob):
+    """Checkpointed distributed extraction over a BundleStore.
+
+    ``algorithm`` may be a single name or a comma-separated list
+    (``"fast,brief,orb"``): multi-algorithm extraction routes through
+    ``extract_features_multi`` so algorithms sharing a response function
+    compute it once per tile; results are stored per algorithm
+    (``<bundle>.<alg>``), identical to single-algorithm runs.
+    """
+
+    def __init__(self, store: BundleStore, algorithm: str,
+                 manifest_path=None, shards_per_bundle: int = 4,
+                 extractor: Optional[Callable] = None):
+        # a custom extractor's output is opaque — store it under the full
+        # job name rather than splitting into per-algorithm results
+        if extractor is not None:
+            self.algorithms = (algorithm,)
+        else:
+            self.algorithms = tuple(a.strip() for a in algorithm.split(",")
+                                    if a.strip())
+            algorithm = ",".join(self.algorithms)   # normalized whitespace
+        self.algorithm = algorithm
+        self.extractor = extractor
+        super().__init__(store, algorithm, manifest_path=manifest_path,
+                         shards_per_bundle=shards_per_bundle)
+
+    def _shards(self, bundle: TileBundle) -> List[TileBundle]:
+        """Over-decomposition for straggler mitigation: split tiles into
+        independent shards so slow/failed work is bounded per shard."""
+        n = max(1, min(self.shards_per_bundle, len(bundle)))
+        splits = np.array_split(np.arange(len(bundle)), n)
+        return [TileBundle(bundle.tiles[s], bundle.headers[s], bundle.cfg)
+                for s in splits if len(s)]
+
+    def _extract(self, tiles, headers, cfg) -> Dict[str, Dict]:
+        if self.extractor is not None:
+            return {self.algorithm: self.extractor(tiles, headers)}
+        if len(self.algorithms) > 1:
+            return extract_features_multi(tiles, headers, self.algorithms,
+                                          cfg)
+        return {self.algorithm:
+                extract_features(tiles, headers, self.algorithm, cfg)}
+
+    def process(self, name: str) -> None:
+        bundle = self.store.get(name)
+        partials: Dict[str, List[Dict]] = {}
+        for shard in self._shards(bundle):
+            r = self._extract(shard.tiles, shard.headers, bundle.cfg)
+            for alg, res in r.items():
+                partials.setdefault(alg, []).append(
+                    {k: np.asarray(v) for k, v in res.items()})
+        for alg, parts in partials.items():
+            self.store.put_result(f"{name}.{alg}", self._merge(parts))
 
     @staticmethod
     def _merge(partials: List[Dict]) -> Dict:
@@ -129,19 +185,23 @@ class DifetJob:
             [p["per_tile_count"] for p in partials])
         return out
 
+    def _alg_counts(self, done: List[str], alg: str) -> Dict[str, int]:
+        return {n: int(self.store.get_result(f"{n}.{alg}")["total_count"])
+                for n in done}
+
     def summary(self) -> Dict:
         done = [n for n, d in self.manifest.done.items() if d]
-        totals = {}
-        for n in done:
-            r = self.store.get_result(f"{n}.{self.algorithm}")
-            totals[n] = int(r["total_count"])
-        return {"algorithm": self.algorithm, "bundles_done": len(done),
-                "bundles_total": len(self.manifest.bundle_names),
-                "counts": totals, "grand_total": sum(totals.values())}
-
-    # ---- elastic scaling ----------------------------------------------------
-    def rebalance(self, n_workers: int) -> List[List[str]]:
-        """Partition outstanding bundles across a (new) worker count —
-        called on membership change; returns per-worker work lists."""
-        rem = self.manifest.remaining
-        return [rem[i::n_workers] for i in range(n_workers)]
+        base = {"algorithm": self.algorithm, "bundles_done": len(done),
+                "bundles_total": len(self.manifest.bundle_names)}
+        if len(self.algorithms) == 1:
+            counts = self._alg_counts(done, self.algorithm)
+            return {**base, "counts": counts,
+                    "grand_total": sum(counts.values())}
+        per_alg = {}
+        for alg in self.algorithms:
+            counts = self._alg_counts(done, alg)
+            per_alg[alg] = {"counts": counts,
+                            "grand_total": sum(counts.values())}
+        return {**base, "per_algorithm": per_alg,
+                "grand_total": sum(p["grand_total"]
+                                   for p in per_alg.values())}

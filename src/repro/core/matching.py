@@ -1,0 +1,192 @@
+"""Descriptor matching + robust registration (fully jit/vmap-able).
+
+The layer between extraction and applications: DIFET computes per-scene
+top-K descriptor sets (fixed shapes + validity masks, `core/engine.py`);
+this module pairs them.  The same group's companion work stitches LandSat
+scenes by pairwise feature matching (arXiv:1808.08522) — `launch/stitch.py`
+drives that pipeline on top of these primitives.
+
+* ``match_pair`` — mutual-nearest-neighbour + Lowe ratio filtering over
+  fixed-shape (K, D) sets.  Distances come from the tiled matcher kernel /
+  its jnp twin (`kernels/ops.match_best2`); metric inferred from dtype
+  (packed uint32 -> Hamming, float -> squared L2).
+* ``estimate_translation`` / ``estimate_similarity`` — fixed-iteration
+  RANSAC with static shapes: hypothesis sampling, scoring and refinement
+  are all dense [iters, K] ops, so a whole batch of scene pairs vmaps into
+  one dispatch (`core/mosaic.py` shards that batch over the mesh).
+
+Convention: a model maps scene-a coordinates to scene-b, ``pb ≈ T(pa)``.
+For pure translation ``T(p) = p + t`` with ``t = (dy, dx)``; if scene
+origins are ``O_a``/``O_b`` in a common frame then ``t = O_a - O_b``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+# any real distance is far below this; masked/overflow slots are far above
+# (Hamming BIG = 2^30, empty-db L2 = +inf)
+_MATCHED_CUT = 1e6
+
+
+class PairMatches(NamedTuple):
+    idx_b: jnp.ndarray    # [Ka] int32 — best database index per query
+    ok: jnp.ndarray       # [Ka] bool — valid & mutual & ratio-accepted
+    dist: jnp.ndarray     # [Ka] best distance (int Hamming / squared L2)
+
+
+class TranslationEstimate(NamedTuple):
+    t: jnp.ndarray          # [2] (dy, dx): pb ≈ pa + t
+    inliers: jnp.ndarray    # [K] bool
+    n_inliers: jnp.ndarray  # int32
+    rms: jnp.ndarray        # f32 — rms inlier residual (px)
+
+
+class SimilarityEstimate(NamedTuple):
+    scale: jnp.ndarray      # f32
+    theta: jnp.ndarray      # f32 radians (x-y plane, counter-clockwise)
+    t: jnp.ndarray          # [2] (ty, tx)
+    inliers: jnp.ndarray    # [K] bool
+    n_inliers: jnp.ndarray  # int32
+    rms: jnp.ndarray        # f32
+
+
+def infer_metric(desc) -> str:
+    return "hamming" if desc.dtype == jnp.uint32 else "l2"
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "use_pallas"))
+def match_pair(desc_a, valid_a, desc_b, valid_b, ratio: float = 0.8, *,
+               metric: Optional[str] = None,
+               use_pallas: bool = False) -> PairMatches:
+    """Mutual-NN + Lowe ratio matches from set a into set b.
+
+    The ratio test compares squared L2 distances, so the threshold is
+    squared for float descriptors; Hamming distances are linear.  A query
+    whose best and second-best distances tie is rejected by the strict
+    ratio inequality — that (plus smallest-index argmin tie-breaks in the
+    matcher) makes the surviving match set independent of database order,
+    hence partition-invariant (tests/test_matcher.py).
+    """
+    metric = metric or infer_metric(desc_a)
+    r = ratio * ratio if metric == "l2" else ratio
+    best, second, idx = kops.match_best2(desc_a, desc_b, valid_b,
+                                         metric=metric, use_pallas=use_pallas)
+    _, _, ridx = kops.match_best2(desc_b, desc_a, valid_a,
+                                  metric=metric, use_pallas=use_pallas)
+    ka = desc_a.shape[0]
+    mutual = jnp.take(ridx, idx) == jnp.arange(ka, dtype=jnp.int32)
+    bf = best.astype(jnp.float32)
+    sf = second.astype(jnp.float32)
+    matched = bf < _MATCHED_CUT           # kills all-masked / empty databases
+    ok = (valid_a != 0) & mutual & matched & (bf < r * sf)
+    return PairMatches(idx, ok, best)
+
+
+def _sample_valid(key, ok, shape):
+    """Uniform indices into the True entries of ``ok`` (jit-able inverse-CDF
+    draw via searchsorted on the running count).  Arbitrary if none are
+    True — callers get 0 inliers in that case, never an exception."""
+    cum = jnp.cumsum(ok.astype(jnp.int32))
+    n_ok = cum[-1]
+    u = jax.random.uniform(key, shape)
+    target = jnp.floor(u * n_ok.astype(jnp.float32)).astype(jnp.int32)
+    idx = jnp.searchsorted(cum, target, side="right")
+    return jnp.clip(idx, 0, ok.shape[0] - 1).astype(jnp.int32)
+
+
+def _finish(resid, okb, tol):
+    inl = okb & (resid < tol)
+    n = inl.sum().astype(jnp.int32)
+    rms = jnp.sqrt(jnp.where(inl, resid * resid, 0.0).sum()
+                   / jnp.maximum(n, 1).astype(jnp.float32))
+    return inl, n, rms
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def estimate_translation(pa, pb, ok, key=None, tol: float = 2.0, *,
+                         iters: int = 128) -> TranslationEstimate:
+    """RANSAC translation: pa, pb [K, 2] (y, x); ok [K] bool.
+
+    Fixed ``iters`` one-point hypotheses scored densely ([iters, K]
+    residual matrix — no data-dependent shapes), then a least-squares
+    refinement (inlier-mean offset) of the best hypothesis.
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    okb = ok != 0
+    pa = pa.astype(jnp.float32)
+    pb = pb.astype(jnp.float32)
+    s = _sample_valid(key, okb, (iters,))
+    t = pb[s] - pa[s]                                        # [T, 2]
+    resid = jnp.linalg.norm(pa[None] + t[:, None] - pb[None], axis=-1)
+    inl = okb[None, :] & (resid < tol)
+    hyp = jnp.argmax(inl.sum(axis=1))
+    w = inl[hyp].astype(jnp.float32)
+    t_ref = ((pb - pa) * w[:, None]).sum(axis=0) / jnp.maximum(w.sum(), 1.0)
+    inl2, n2, rms = _finish(jnp.linalg.norm(pa + t_ref - pb, axis=-1),
+                            okb, tol)
+    return TranslationEstimate(t_ref, inl2, n2, rms)
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def estimate_similarity(pa, pb, ok, key=None, tol: float = 2.0, *,
+                        iters: int = 256) -> SimilarityEstimate:
+    """RANSAC similarity (scale + rotation + translation) via complex
+    arithmetic: points are ``c = x + iy``, the model is ``c_b = z c_a + t``
+    with ``z = scale · e^{iθ}``.  Two-point hypotheses; weighted complex
+    least squares refines the winner."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    okb = ok != 0
+    a = (pa[:, 1] + 1j * pa[:, 0]).astype(jnp.complex64)
+    b = (pb[:, 1] + 1j * pb[:, 0]).astype(jnp.complex64)
+    s = _sample_valid(key, okb, (iters, 2))
+    a1, a2 = a[s[:, 0]], a[s[:, 1]]
+    b1, b2 = b[s[:, 0]], b[s[:, 1]]
+    den = a2 - a1
+    good = jnp.abs(den) > 1e-6
+    z = (b2 - b1) / jnp.where(good, den, 1.0)
+    t = b1 - z * a1
+    resid = jnp.abs(z[:, None] * a[None, :] + t[:, None] - b[None, :])
+    inl = okb[None, :] & (resid < tol) & good[:, None]
+    hyp = jnp.argmax(inl.sum(axis=1))
+    w = inl[hyp].astype(jnp.float32)
+    sw = jnp.maximum(w.sum(), 1e-6)
+    am = (w * a).sum() / sw
+    bm = (w * b).sum() / sw
+    z2 = ((w * jnp.conj(a - am) * (b - bm)).sum()
+          / jnp.maximum((w * jnp.abs(a - am) ** 2).sum(), 1e-9))
+    t2 = bm - z2 * am
+    inl2, n2, rms = _finish(jnp.abs(z2 * a + t2 - b), okb, tol)
+    return SimilarityEstimate(jnp.abs(z2), jnp.angle(z2),
+                              jnp.stack([jnp.imag(t2), jnp.real(t2)]),
+                              inl2, n2, rms)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "model", "iters",
+                                             "use_pallas"))
+def register_pair(ya, xa, desc_a, valid_a, yb, xb, desc_b, valid_b,
+                  key=None, ratio: float = 0.8, tol: float = 2.0, *,
+                  metric: Optional[str] = None, model: str = "translation",
+                  iters: int = 128, use_pallas: bool = False):
+    """Match two scenes' feature sets and estimate the transform between
+    them: the one-call registration primitive (vmapped over a pair batch by
+    `core/mosaic.py`).  Returns (PairMatches, estimate)."""
+    m = match_pair(desc_a, valid_a, desc_b, valid_b, ratio,
+                   metric=metric, use_pallas=use_pallas)
+    pa = jnp.stack([ya, xa], axis=-1).astype(jnp.float32)
+    pb = jnp.stack([jnp.take(yb, m.idx_b), jnp.take(xb, m.idx_b)],
+                   axis=-1).astype(jnp.float32)
+    if model == "translation":
+        est = estimate_translation(pa, pb, m.ok, key, tol, iters=iters)
+    elif model == "similarity":
+        est = estimate_similarity(pa, pb, m.ok, key, tol, iters=iters)
+    else:
+        raise ValueError(f"unknown model {model!r}")
+    return m, est

@@ -1,0 +1,224 @@
+"""Scene-pair registration + mosaic layout — the stitching companion
+workload (arXiv:1808.08522/.08528) built on DIFET extraction results.
+
+Pipeline (driven end-to-end by `launch/stitch.py`):
+
+  1. per-scene extraction results (top-K keypoints + descriptors with
+     validity masks) are loaded from the ``BundleStore``;
+  2. the pair list is chunked and registered by ``MatchPhase`` — a
+     checkpointed ``ManifestJob`` (same manifest/commit machinery as the
+     extraction phase), each chunk one batched ``vmap`` of
+     ``matching.register_pair`` whose leading pair axis is sharded over
+     the mesh ``data`` axis (`distributed/sharding.py::batch_pspec`);
+  3. ``solve_layout`` anchors the first scene and walks the
+     inlier-verified pair graph (BFS spanning tree) to absolute scene
+     positions; ``mosaic_summary`` reports the layout.
+
+Pair results are stored per pair under a job-qualified name
+(``<a>__<b>.match_<alg>_<digest>``), so a killed match phase resumes
+exactly where it died and different configs sharing a store never alias —
+the registration itself is deterministic (fixed RANSAC keys derived from
+the pair index).
+"""
+from __future__ import annotations
+
+import functools
+import hashlib
+import json
+from collections import deque
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bundle import BundleStore
+from repro.core.job import ManifestJob
+from repro.core import matching
+
+
+def pair_name(a: str, b: str) -> str:
+    return f"{a}__{b}"
+
+
+def load_scene_features(store: BundleStore, scene: str,
+                        algorithm: str) -> Dict[str, np.ndarray]:
+    """Top-K features of one scene from its extraction result (global
+    scene coordinates + descriptors + validity)."""
+    r = store.get_result(f"{scene}.{algorithm}")
+    if "top_desc" not in r:
+        raise ValueError(
+            f"algorithm {algorithm!r} stores no descriptors — the match "
+            "phase needs one of sift/surf/brief/orb")
+    return {"ys": r["top_ys"], "xs": r["top_xs"],
+            "desc": r["top_desc"], "valid": r["top_valid"]}
+
+
+def make_pair_solver(metric: Optional[str], ratio: float, tol: float,
+                     iters: int, use_pallas: bool = False):
+    """jit'd batched registration: every array gains a leading pair axis P;
+    one dispatch registers the whole chunk (matcher + RANSAC vmapped)."""
+
+    def one(ya, xa, da, va, yb, xb, db, vb, key):
+        m, est = matching.register_pair(
+            ya, xa, da, va, yb, xb, db, vb, key, ratio, tol,
+            metric=metric, model="translation", iters=iters,
+            use_pallas=use_pallas)
+        return {"t": est.t, "n_inliers": est.n_inliers,
+                "n_matches": m.ok.sum().astype(jnp.int32), "rms": est.rms}
+
+    return jax.jit(jax.vmap(one))
+
+
+def _shard_batch(arrays: List, mesh) -> Tuple[List, int]:
+    """Shard the leading pair axis over the mesh ``data`` axis (padding P
+    to a multiple of the data-parallel extent; padded rows are cropped by
+    the caller).  Identity on a single-device host."""
+    p = arrays[0].shape[0]
+    if mesh is None or mesh.size == 1:
+        return arrays, p
+    from jax.sharding import NamedSharding
+    from repro.distributed.sharding import batch_pspec, dp_axes
+    dp = int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))
+    pad = (-p) % dp
+    out = []
+    for a in arrays:
+        if pad:
+            a = np.concatenate([a, np.repeat(a[-1:], pad, axis=0)], axis=0)
+        out.append(jax.device_put(
+            a, NamedSharding(mesh, batch_pspec(mesh, a.ndim))))
+    return out, p
+
+
+class MatchPhase(ManifestJob):
+    """Checkpointed pairwise-registration phase over extraction results.
+
+    Work items are fixed chunks of the pair list; each chunk is one
+    batched, mesh-sharded solver dispatch, and each pair commits an
+    individual ``<a>__<b>.match`` result.  Restart-deterministic: RANSAC
+    keys are folded from the global pair index, not from wall clock.
+    """
+
+    def __init__(self, store: BundleStore, pairs: Sequence[Tuple[str, str]],
+                 algorithm: str, *, metric: Optional[str] = None,
+                 ratio: float = 0.8, tol: float = 2.0, iters: int = 128,
+                 pairs_per_step: int = 8, mesh=None,
+                 use_pallas: bool = False, manifest_path=None, seed: int = 0):
+        self.pairs = [tuple(p) for p in pairs]
+        self._pair_index = {p: i for i, p in enumerate(self.pairs)}
+        self.algorithm = algorithm
+        self.mesh = mesh
+        self.seed = seed
+        self._params = (metric, float(ratio), float(tol), int(iters),
+                        bool(use_pallas))
+        self._chunks = {
+            f"pairs_{i:05d}": self.pairs[i * pairs_per_step:
+                                         (i + 1) * pairs_per_step]
+            for i in range((len(self.pairs) + pairs_per_step - 1)
+                           // pairs_per_step)}
+        self._feats: Dict[str, Dict[str, np.ndarray]] = {}
+        # the manifest records chunk names only, so a stale manifest from a
+        # different pair list / chunking / RANSAC config would silently
+        # skip work on resume — fingerprint the job config into the name
+        # so changed configs get a fresh manifest (per-pair results are
+        # deterministic, so re-registering an already-stored pair is safe)
+        digest = hashlib.sha1(json.dumps(
+            [self.pairs, pairs_per_step, self._params, seed],
+            default=str).encode()).hexdigest()[:8]
+        super().__init__(store, f"match_{algorithm}_{digest}",
+                         items=sorted(self._chunks),
+                         manifest_path=manifest_path)
+
+    def _features(self, scene: str) -> Dict[str, np.ndarray]:
+        if scene not in self._feats:
+            self._feats[scene] = load_scene_features(self.store, scene,
+                                                     self.algorithm)
+        return self._feats[scene]
+
+    @functools.cached_property
+    def _solver(self):
+        return make_pair_solver(*self._params)
+
+    def process(self, name: str) -> None:
+        chunk = self._chunks[name]
+        fa = [self._features(a) for a, _ in chunk]
+        fb = [self._features(b) for _, b in chunk]
+        keys = np.stack([
+            np.asarray(jax.random.fold_in(jax.random.PRNGKey(self.seed),
+                                          self._pair_index[p]))
+            for p in chunk])
+        batch = [np.stack([f["ys"] for f in fa]),
+                 np.stack([f["xs"] for f in fa]),
+                 np.stack([f["desc"] for f in fa]),
+                 np.stack([f["valid"] for f in fa]),
+                 np.stack([f["ys"] for f in fb]),
+                 np.stack([f["xs"] for f in fb]),
+                 np.stack([f["desc"] for f in fb]),
+                 np.stack([f["valid"] for f in fb]),
+                 keys]
+        batch, p = _shard_batch(batch, self.mesh)
+        out = jax.tree_util.tree_map(np.asarray, self._solver(*batch))
+        for i, (a, b) in enumerate(chunk):
+            self.store.put_result(self._result_name(a, b), {
+                "t": out["t"][i], "n_inliers": out["n_inliers"][i],
+                "n_matches": out["n_matches"][i], "rms": out["rms"][i]})
+
+    def _result_name(self, a: str, b: str) -> str:
+        # job-qualified (algorithm + config digest): two configs sharing a
+        # store must never alias each other's pair registrations
+        return f"{pair_name(a, b)}.{self.job_name}"
+
+    def results(self) -> Dict[Tuple[str, str], Dict[str, np.ndarray]]:
+        return {(a, b): self.store.get_result(self._result_name(a, b))
+                for a, b in self.pairs
+                if self.store.has_result(self._result_name(a, b))}
+
+
+def solve_layout(scene_names: Sequence[str],
+                 pair_results: Dict[Tuple[str, str], Dict],
+                 min_inliers: int = 8):
+    """Absolute scene positions from verified pairwise offsets.
+
+    Registration gives ``t = O_a - O_b`` per pair (`core/matching.py`
+    convention), so a BFS spanning tree from the anchor (first scene)
+    propagates ``O_b = O_a - t``.  Pairs under ``min_inliers`` are dropped
+    as unverified; scenes the surviving graph cannot reach are omitted
+    from the returned positions (the caller reports them).
+
+    Returns (positions {scene: [y, x] float64}, dropped_pairs).
+    """
+    adj: Dict[str, List[Tuple[str, np.ndarray]]] = {n: [] for n in scene_names}
+    dropped = []
+    for (a, b), r in pair_results.items():
+        if int(r["n_inliers"]) < min_inliers:
+            dropped.append((a, b))
+            continue
+        t = np.asarray(r["t"], np.float64)
+        adj[a].append((b, -t))       # O_b = O_a - t
+        adj[b].append((a, t))        # O_a = O_b + t
+    anchor = scene_names[0]
+    positions = {anchor: np.zeros(2)}
+    queue = deque([anchor])
+    while queue:
+        cur = queue.popleft()
+        for nxt, delta in adj[cur]:
+            if nxt not in positions:
+                positions[nxt] = positions[cur] + delta
+                queue.append(nxt)
+    return positions, dropped
+
+
+def mosaic_summary(positions: Dict[str, np.ndarray],
+                   scene_hw: Tuple[int, int]) -> Dict:
+    """Mosaic layout: normalized per-scene offsets + overall canvas size."""
+    if not positions:
+        return {"n_scenes": 0, "mosaic_hw": (0, 0), "offsets": {}}
+    pos = np.stack(list(positions.values()))
+    origin = pos.min(axis=0)
+    extent = pos.max(axis=0) - origin + np.asarray(scene_hw, np.float64)
+    return {
+        "n_scenes": len(positions),
+        "mosaic_hw": (int(np.ceil(extent[0])), int(np.ceil(extent[1]))),
+        "offsets": {k: (float(v[0] - origin[0]), float(v[1] - origin[1]))
+                    for k, v in positions.items()},
+    }

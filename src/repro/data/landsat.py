@@ -7,8 +7,11 @@ from __future__ import annotations
 import numpy as np
 
 
-def synthetic_scene(h: int, w: int, seed: int = 0) -> np.ndarray:
-    """Grayscale float32 [h, w] in [0, 1]."""
+def synthetic_scene(h: int, w: int, seed: int = 0,
+                    density: float = 1.0) -> np.ndarray:
+    """Grayscale float32 [h, w] in [0, 1].  ``density`` scales the count of
+    fields/blobs (1.0 = the historical default; stitching workloads use
+    denser scenes so pairwise registration has enough corners to verify)."""
     rng = np.random.RandomState(seed)
     # smooth low-frequency terrain
     coarse = rng.rand(max(h // 64, 2), max(w // 64, 2)).astype(np.float32)
@@ -19,7 +22,7 @@ def synthetic_scene(h: int, w: int, seed: int = 0) -> np.ndarray:
                           + np.roll(terrain, 1, 1) + np.roll(terrain, -1, 1))
     img = 0.5 * terrain
     # rectangular "fields" with crisp edges/corners
-    n_fields = max(4, (h * w) // 20000)
+    n_fields = max(4, int(density * (h * w) / 20000))
     for _ in range(n_fields):
         y0 = rng.randint(0, max(h - 8, 1))
         x0 = rng.randint(0, max(w - 8, 1))

@@ -1,7 +1,11 @@
-"""Pallas TPU kernels for DIFET's stencil hot-spots.
+"""Pallas TPU kernels for DIFET's per-pixel and per-descriptor hot spots.
 
-Each kernel fuses a multi-pass stencil pipeline into one VMEM-resident pass
-(one HBM read + one write per tile), vs. XLA's one-materialization-per-stage
-lowering of the pure-jnp reference.  Kernels are validated in interpret mode
-against ``ref.py`` oracles over shape/dtype sweeps (tests/test_kernels.py).
+The stencil kernels (harris, fastscore, scalespace) fuse a multi-pass
+pipeline into one VMEM-resident pass — one HBM read + one write per tile —
+vs. XLA's one-materialization-per-stage lowering of the pure-jnp
+reference.  The matcher kernel keeps a descriptor database VMEM-resident
+and streams bit-packed/float distance chunks through running best-2
+registers.  Kernels are validated in interpret mode against ``ref.py``
+oracles over shape/dtype sweeps (tests/test_kernels.py,
+tests/test_matcher.py).
 """

@@ -1,0 +1,140 @@
+"""Tiled brute-force descriptor matcher kernel (popcount-Hamming + L2).
+
+The matching stage pairs every query descriptor against a scene's database
+and keeps the best and second-best distances (the Lowe ratio test needs
+both).  A naive lowering materializes the full [Q, K] distance matrix in
+HBM — for binary descriptors it is even worse, because the obvious jnp
+formulation unpacks 256-bit descriptors into 256 bools (32x the traffic).
+
+This kernel keeps the whole database VMEM-resident: each program owns one
+``QBLOCK``-query block, streams the database in ``KCHUNK`` chunks that never
+leave VMEM, and maintains running (best, second-best, argbest) registers —
+only three [Q]-vectors are written back to HBM.
+
+* **Hamming (BRIEF/ORB)**: descriptors stay bit-packed as uint32 lanes
+  (256 bits = 8 words); per-word XOR + SWAR popcount (the shift-mask-add
+  reduction — 5 integer VPU ops per word) summed over words.  Distances
+  are exact int32, so kernel/oracle/fallback agree *bit-identically*.
+* **L2 (SIFT/SURF)**: the ``|q|^2 + |k|^2 - 2 q.k`` expansion; the q.k
+  block is one MXU ``dot_general`` per chunk.
+
+``best2_scan`` below is the exact per-block formulation the kernel runs,
+written on jnp values — it doubles as the CPU/fallback path (dispatched by
+``ops.match_best2`` when the database exceeds the VMEM budget or the host
+has no TPU), so fallback and kernel results are the same computation.
+
+Invalid database slots (validity masks come from capacity-K extraction)
+are forced to a BIG distance before the running update; ties are broken
+toward the smallest database index (``argmin`` first-occurrence + a
+strictly-less merge), so matches are deterministic and partition-invariant.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+QBLOCK = 128          # queries per program (VPU sublane-friendly)
+BIG_HAMMING = 1 << 30     # > any packed-bit distance; < int32 max
+
+
+def kchunk_for(metric: str) -> int:
+    """Database rows per VMEM-resident chunk.  Hamming holds a [Q, C, W]
+    XOR/popcount intermediate (W words per descriptor), so it chunks 4x
+    finer than L2, whose per-chunk state is just the [Q, C] distance
+    block coming off the MXU."""
+    return 256 if metric == "hamming" else 1024
+
+
+def popcount32(x):
+    """Per-word population count of a uint32 array (SWAR bit-slicing)."""
+    x = x - ((x >> 1) & 0x55555555)
+    x = (x & 0x33333333) + ((x >> 2) & 0x33333333)
+    x = (x + (x >> 4)) & 0x0F0F0F0F
+    return (x * 0x01010101) >> 24          # byte-sum via overflowing multiply
+
+
+def _chunk_best2(d, start, big):
+    """Best/second/argbest of one [Q, C] distance chunk; indices global."""
+    arg = jnp.argmin(d, axis=1).astype(jnp.int32)   # first occurrence = smallest idx
+    best = jnp.min(d, axis=1)
+    cols = jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
+    second = jnp.min(jnp.where(cols == arg[:, None], big, d), axis=1)
+    return best, second, arg + jnp.int32(start)
+
+
+def best2_scan(q, db, db_valid, *, metric: str, kchunk: int = None):
+    """Running best/second-best over database chunks.
+
+    q [Q, D], db [K, D], db_valid [K] (bool or int) -> (best [Q],
+    second [Q], idx [Q] int32).  Runs on VMEM values inside the kernel and
+    on plain arrays as the jnp fallback — identical formulation either way.
+    """
+    nq, nk = q.shape[0], db.shape[0]
+    kchunk = kchunk_for(metric) if kchunk is None else kchunk
+    if metric == "hamming":
+        big = jnp.int32(BIG_HAMMING)
+    elif metric == "l2":
+        big = jnp.float32(jnp.inf)
+        qn = jnp.sum(q * q, axis=-1)
+        dn = jnp.sum(db * db, axis=-1)
+    else:
+        raise ValueError(f"unknown metric {metric!r}")
+    best = jnp.full((nq,), big)
+    second = jnp.full((nq,), big)
+    bidx = jnp.zeros((nq,), jnp.int32)
+    for start in range(0, nk, kchunk):
+        c = db[start:start + kchunk]
+        m = db_valid[start:start + kchunk]
+        if metric == "hamming":
+            x = q[:, None, :] ^ c[None, :, :]               # [Q, C, W]
+            d = popcount32(x).astype(jnp.int32).sum(axis=-1)
+        else:
+            dot = jax.lax.dot_general(q, c, (((1,), (1,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+            d = qn[:, None] + dn[start:start + kchunk][None, :] - 2.0 * dot
+        d = jnp.where(m[None, :] != 0, d, big)
+        cb, cs, ci = _chunk_best2(d, start, big)
+        take = cb < best                  # ties keep the earlier (smaller) idx
+        second = jnp.where(take, jnp.minimum(best, cs), jnp.minimum(second, cb))
+        bidx = jnp.where(take, ci, bidx)
+        best = jnp.where(take, cb, best)
+    return best, second, bidx
+
+
+def match_kernel(q_ref, db_ref, mask_ref, best_ref, sec_ref, idx_ref, *,
+                 metric: str, kchunk: int):
+    """q_ref [QBLOCK, D]; db_ref [K, D] (whole DB, VMEM-resident across the
+    query grid); mask_ref [1, K] int32; outputs [1, QBLOCK] each."""
+    b, s, i = best2_scan(q_ref[...], db_ref[...], mask_ref[0],
+                         metric=metric, kchunk=kchunk)
+    best_ref[0] = b
+    sec_ref[0] = s
+    idx_ref[0] = i
+
+
+def match_pallas(q, db, db_mask, *, metric: str, interpret: bool,
+                 kchunk: int = None):
+    """q [NQ, D] (NQ a QBLOCK multiple), db [NK, D], db_mask [1, NK] int32
+    -> (best [NQ], second [NQ], idx [NQ])."""
+    nq, d = q.shape
+    nk = db.shape[0]
+    kchunk = kchunk_for(metric) if kchunk is None else kchunk
+    dist_dt = jnp.int32 if metric == "hamming" else jnp.float32
+    grid = (nq // QBLOCK,)
+    kern = functools.partial(match_kernel, metric=metric, kchunk=kchunk)
+    outs = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec((QBLOCK, d), lambda i: (i, 0)),
+                  pl.BlockSpec((nk, d), lambda i: (0, 0)),
+                  pl.BlockSpec((1, nk), lambda i: (0, 0))],
+        out_specs=[pl.BlockSpec((1, QBLOCK), lambda i: (i, 0))] * 3,
+        out_shape=[jax.ShapeDtypeStruct((grid[0], QBLOCK), dist_dt),
+                   jax.ShapeDtypeStruct((grid[0], QBLOCK), dist_dt),
+                   jax.ShapeDtypeStruct((grid[0], QBLOCK), jnp.int32)],
+        interpret=interpret,
+    )(q, db, db_mask)
+    return tuple(o.reshape(-1) for o in outs)

@@ -17,6 +17,7 @@ from repro.core.pyramid import gaussian_kernel_1d, octave_increments
 from repro.kernels import harris as _harris
 from repro.kernels import blur as _blur
 from repro.kernels import fastscore as _fast
+from repro.kernels import matcher as _matcher
 from repro.kernels import scalespace as _scalespace
 
 LANE = 128
@@ -117,6 +118,73 @@ def scalespace_fits_vmem(h: int, w: int, scales_per_octave: int,
                          sigma0: float = 1.6) -> bool:
     return scalespace_vmem_bytes(h, w, scales_per_octave,
                                  sigma0) <= VMEM_BUDGET_BYTES
+
+
+MATCH_QBLOCK = _matcher.QBLOCK
+
+
+def matcher_vmem_bytes(nk: int, d: int, metric: str = "l2") -> int:
+    """Working-set estimate for the matcher kernel: the VMEM-resident
+    database slab + one query block + the per-chunk distance temporaries
+    (Hamming also holds the [Q, C, W] XOR/popcount intermediate).  See
+    DESIGN.md §7 for the budget table."""
+    kc = min(_matcher.kchunk_for(metric), nk)
+    db = nk * d * 4
+    q = MATCH_QBLOCK * d * 4
+    if metric == "hamming":
+        tmp = MATCH_QBLOCK * kc * (2 * d + 2) * 4
+    else:
+        tmp = MATCH_QBLOCK * kc * 3 * 4 + 2 * nk * 4
+    return db + q + tmp + 6 * MATCH_QBLOCK * 4
+
+
+def matcher_fits_vmem(nk: int, d: int, metric: str = "l2") -> bool:
+    return matcher_vmem_bytes(nk, d, metric) <= VMEM_BUDGET_BYTES
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "use_pallas",
+                                             "interpret"))
+def match_best2(queries, db, db_valid=None, *, metric: str = "l2",
+                use_pallas: bool = False, interpret: bool = None):
+    """Per-query (best, second-best, argbest) over a masked descriptor DB.
+
+    queries [Q, D], db [K, D], db_valid [K] (None = all valid).  For
+    ``metric="hamming"`` both must be bit-packed uint32 word lanes
+    (``descriptors.pack_bits`` layout); distances are exact int32.  For
+    ``metric="l2"`` inputs are cast to fp32 and distances are *squared* L2
+    (monotonic for ranking; the ratio test squares its threshold).
+
+    Dispatch (same pattern as the fused scale-space kernel): the Pallas
+    kernel runs when requested AND the database working set fits the VMEM
+    budget; otherwise the identical chunked jnp formulation
+    (``matcher.best2_scan``) runs — on CPU hosts in interpret-mode testing
+    the kernel validates numerics, not speed.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    nq, nk = queries.shape[0], db.shape[0]
+    if db_valid is None:
+        db_valid = jnp.ones((nk,), jnp.bool_)
+    if metric == "l2":
+        queries = queries.astype(jnp.float32)
+        db = db.astype(jnp.float32)
+        extra = (-queries.shape[1]) % LANE     # zero-pad D to a lane multiple
+        if extra:
+            queries = jnp.pad(queries, ((0, 0), (0, extra)))
+            db = jnp.pad(db, ((0, 0), (0, extra)))
+    elif metric == "hamming":
+        if queries.dtype != jnp.uint32 or db.dtype != jnp.uint32:
+            raise TypeError("hamming matching needs bit-packed uint32 "
+                            "descriptors (descriptors.pack_bits)")
+    else:
+        raise ValueError(f"unknown metric {metric!r}")
+    if use_pallas and matcher_fits_vmem(nk, queries.shape[1], metric):
+        pad_q = (-nq) % MATCH_QBLOCK
+        qp = jnp.pad(queries, ((0, pad_q), (0, 0))) if pad_q else queries
+        mask = db_valid.astype(jnp.int32)[None, :]
+        best, second, idx = _matcher.match_pallas(qp, db, mask, metric=metric,
+                                                  interpret=interpret)
+        return best[:nq], second[:nq], idx[:nq]
+    return _matcher.best2_scan(queries, db, db_valid, metric=metric)
 
 
 @functools.partial(jax.jit, static_argnames=("scales_per_octave",

@@ -101,6 +101,41 @@ def scalespace_octave(base, *, scales_per_octave: int,
     return resp, seed
 
 
+def _unpack_bits(x):
+    """uint32 [N, W] -> bool [N, W*32] (little-endian within each word)."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (x[..., None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(x.shape[0], -1).astype(jnp.bool_)
+
+
+def match_best2(q, db, db_valid, *, metric: str):
+    """Oracle for the matcher kernel: the full [Q, K] distance matrix with
+    an *independent* formulation — Hamming by bit-unpacked XOR counting
+    (vs the kernel's packed SWAR popcount), L2 by the same norm expansion
+    but on the un-chunked matrix.  best/second by argmin + re-min; ties go
+    to the smallest database index, matching the kernel's merge rule.
+    Hamming distances are exact ints, so kernel equality is bitwise."""
+    if metric == "hamming":
+        d = jnp.sum(_unpack_bits(q)[:, None, :] != _unpack_bits(db)[None, :, :],
+                    axis=-1, dtype=jnp.int32)
+        big = jnp.int32(1 << 30)
+    elif metric == "l2":
+        q = q.astype(jnp.float32)
+        db = db.astype(jnp.float32)
+        qn = jnp.sum(q * q, axis=-1)
+        dn = jnp.sum(db * db, axis=-1)
+        d = qn[:, None] + dn[None, :] - 2.0 * (q @ db.T)
+        big = jnp.float32(jnp.inf)
+    else:
+        raise ValueError(f"unknown metric {metric!r}")
+    d = jnp.where(db_valid[None, :] != 0, d, big)
+    arg = jnp.argmin(d, axis=1).astype(jnp.int32)
+    best = jnp.min(d, axis=1)
+    cols = jnp.arange(db.shape[0], dtype=jnp.int32)
+    second = jnp.min(jnp.where(cols[None, :] == arg[:, None], big, d), axis=1)
+    return best, second, arg
+
+
 def fast_score(img, *, threshold: float = 0.15, arc: int = 9):
     from repro.core.detectors import FAST_OFFSETS
     h, w = img.shape[-2:]

@@ -32,6 +32,11 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--algorithm", default="harris",
                     choices=list(PAPER_ALGORITHMS))
+    ap.add_argument("--algorithms", default=None,
+                    help="comma-separated multi-algorithm mode "
+                         "(e.g. fast,brief,orb): one pass through "
+                         "extract_features_multi, algorithms sharing a "
+                         "response map compute it once per tile")
     ap.add_argument("--scenes", type=int, default=3)
     ap.add_argument("--scene-size", type=int, default=768)
     ap.add_argument("--tile", type=int, default=256)
@@ -41,11 +46,15 @@ def main(argv=None):
                     help="simulate worker failure after N bundles")
     args = ap.parse_args(argv)
 
+    algorithm = args.algorithms or args.algorithm
+    for alg in algorithm.split(","):
+        if alg.strip() not in PAPER_ALGORITHMS:
+            ap.error(f"unknown algorithm {alg.strip()!r}")
     cfg = DifetConfig(tile=args.tile, halo=24, max_keypoints_per_tile=256)
     store = build_store(args.store, args.scenes,
                         (args.scene_size, args.scene_size), cfg)
-    job = DifetJob(store, args.algorithm)
-    print(f"[difet] {args.algorithm} over {len(store.list())} bundles "
+    job = DifetJob(store, algorithm)
+    print(f"[difet] {algorithm} over {len(store.list())} bundles "
           f"({args.scenes} scenes of {args.scene_size}^2, tile={args.tile})")
     t0 = time.time()
     try:
@@ -55,6 +64,9 @@ def main(argv=None):
         print(f"  !! {e} — restart with the same command to resume")
         raise SystemExit(2)
     dt = time.time() - t0
+    if "per_algorithm" in summary:
+        for alg, s in summary["per_algorithm"].items():
+            print(f"  {alg}: {s['grand_total']} features")
     print(f"[done] {summary['bundles_done']}/{summary['bundles_total']} "
           f"bundles, {summary['grand_total']} features, {dt:.1f}s")
     return summary

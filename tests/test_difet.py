@@ -157,6 +157,64 @@ def test_rgba_conversion_and_bundle_roundtrip(tmp_path):
     assert back.cfg.tile == 64
 
 
+def test_bundle_store_atomic_writes(tmp_path, monkeypatch):
+    """A writer crashing mid-write must never surface a truncated npz:
+    leftovers are invisible to list()/has_result, and an interrupted
+    overwrite leaves the previous committed file intact."""
+    import repro.core.bundle as bundle_mod
+    cfg = DifetConfig(tile=64, halo=16)
+    b0 = tile_scene(synthetic_scene(100, 100, 0), cfg)
+    store = BundleStore(tmp_path)
+    store.put("b0", b0)
+    store.put_result("b0.harris", {"total_count": np.int64(7)})
+
+    # crash leftovers (what a killed writer leaves behind)
+    (tmp_path / "junk.npz.tmp").write_bytes(b"\x00" * 64)
+    (tmp_path / "junk.result.npz.tmp").write_bytes(b"PK\x03\x04trunc")
+    assert store.list() == ["b0"]
+    assert not store.has_result("junk")
+
+    # interrupt an overwrite mid-write: the committed b0 must survive
+    real_savez = np.savez_compressed
+
+    def dying_savez(f, **arrays):
+        real_savez(f, **{k: v[:1] for k, v in arrays.items() if k == "tiles"})
+        raise IOError("disk full")
+
+    b1 = tile_scene(synthetic_scene(100, 100, 1), cfg)
+    monkeypatch.setattr(bundle_mod.np, "savez_compressed", dying_savez)
+    with pytest.raises(IOError):
+        store.put("b0", b1)
+    monkeypatch.setattr(bundle_mod.np, "savez_compressed", real_savez)
+    back = store.get("b0")
+    np.testing.assert_array_equal(back.tiles, b0.tiles)   # old data intact
+    assert int(store.get_result("b0.harris")["total_count"]) == 7
+
+
+def test_multi_algorithm_job_matches_single(tmp_path):
+    """DifetJob('fast,brief,orb') — the shared-response multi path — must
+    store per-algorithm results identical to three single-algorithm jobs."""
+    from repro.core.job import DifetJob
+    cfg = DifetConfig(tile=64, halo=16, max_keypoints_per_tile=32)
+    store = BundleStore(tmp_path / "multi")
+    store.put("b0", bundle_scenes([synthetic_scene(100, 120, 3)], cfg))
+    multi = DifetJob(store, "fast,brief,orb").run()
+    assert multi["bundles_done"] == 1
+    assert set(multi["per_algorithm"]) == {"fast", "brief", "orb"}
+    for alg in ("fast", "brief", "orb"):
+        ref_store = BundleStore(tmp_path / alg)
+        ref_store.put("b0", bundle_scenes([synthetic_scene(100, 120, 3)],
+                                          cfg))
+        single = DifetJob(ref_store, alg).run()
+        assert multi["per_algorithm"][alg]["grand_total"] \
+            == single["grand_total"]
+        rm = store.get_result(f"b0.{alg}")
+        rs = ref_store.get_result(f"b0.{alg}")
+        assert set(rm) == set(rs)
+        for key in rm:
+            np.testing.assert_array_equal(rm[key], rs[key], err_msg=key)
+
+
 def test_pad_to_multiple():
     cfg = DifetConfig(tile=64, halo=16)
     b = tile_scene(synthetic_scene(100, 100, 0), cfg)

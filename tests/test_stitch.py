@@ -1,0 +1,62 @@
+"""Stitching workload: end-to-end registration accuracy, checkpointed
+restart of the match phase, and the mosaic layout solve."""
+import numpy as np
+import pytest
+
+from repro.core import mosaic
+from repro.launch import stitch
+
+ARGS = ["--scenes", "3", "--scene-size", "256", "--overlap", "128",
+        "--tile", "64", "--algorithm", "brief", "--min-inliers", "8"]
+
+
+def test_stitch_end_to_end_and_restart(tmp_path):
+    """`python -m repro.launch.stitch` on known-shift synthetic scenes must
+    recover every pairwise offset to sub-pixel accuracy and place all
+    scenes; a second invocation resumes from the store (no recompute) and
+    reproduces the layout exactly."""
+    args = ARGS + ["--store", str(tmp_path / "s")]
+    out = stitch.main(args)
+    assert out["max_err"] is not None and out["max_err"] <= 1.0
+    assert len(out["positions"]) == 3
+    assert not out["dropped"]
+    # deterministic resume: results come from committed store artifacts
+    out2 = stitch.main(args)
+    assert out2["positions"] == out["positions"]
+    assert out2["pairs"] == out["pairs"]
+
+
+def test_stitch_match_phase_restart_after_failure(tmp_path):
+    """Kill the match phase after its first chunk; the same command must
+    resume and finish (the ManifestJob guarantee, extraction + matching)."""
+    args = ARGS + ["--store", str(tmp_path / "s"), "--pairs-per-step", "1"]
+    with pytest.raises(SystemExit):
+        stitch.main(args + ["--fail-after", "1"])
+    out = stitch.main(args)
+    assert out["max_err"] is not None and out["max_err"] <= 1.0
+    assert len(out["positions"]) == 3
+
+
+def test_solve_layout_drops_unverified_pairs():
+    names = ["a", "b", "c"]
+    results = {
+        ("a", "b"): {"t": np.array([0.0, -10.0]), "n_inliers": 50},
+        ("b", "c"): {"t": np.array([2.0, -20.0]), "n_inliers": 3},  # weak
+    }
+    pos, dropped = mosaic.solve_layout(names, results, min_inliers=8)
+    assert dropped == [("b", "c")]
+    assert set(pos) == {"a", "b"}          # c unreachable
+    np.testing.assert_allclose(pos["b"], [0.0, 10.0])
+    summary = mosaic.mosaic_summary(pos, (100, 100))
+    assert summary["n_scenes"] == 2
+    assert summary["mosaic_hw"] == (100, 110)
+
+
+def test_solve_layout_chain_propagation():
+    names = [f"s{i}" for i in range(4)]
+    results = {(names[i], names[i + 1]):
+               {"t": np.array([float(i), -64.0]), "n_inliers": 20}
+               for i in range(3)}
+    pos, dropped = mosaic.solve_layout(names, results)
+    assert not dropped and len(pos) == 4
+    np.testing.assert_allclose(pos["s3"], [-(0 + 1 + 2), 3 * 64.0])
