@@ -1,0 +1,186 @@
+"""Serving-subsystem benchmark + parity gate.
+
+Four measurements on an in-process :class:`FeatureService`:
+
+* **throughput** — the same unique-tile workload (cache disabled, so the
+  win is honest batching, not memoization) through a one-request-at-a-time
+  service (``max_batch=1``, the sequential baseline: a synchronous client,
+  each request paying the full round trip) vs continuous-batched services
+  at batch 8/16/32.  Deliverable: batched >= 3x sequential at batch 32 on
+  a 2-core CPU host (batching amortizes the per-dispatch overhead that
+  dominates small-tile extraction; on TPU the win is larger — one device
+  step vs B).
+* **latency** — closed-loop p50/p99 per batch setting.
+* **cache** — a second pass over the same tiles must be served 100% from
+  the content-hash result cache.
+* **parity** — served results must be *bit-identical* to direct
+  ``core/engine.py::extract_features_multi`` calls on the same padded
+  tiles.
+
+Parity and the 100%-hit-rate check are CI gates: ``main`` exits non-zero
+on mismatch, and ``run(strict=True)`` (the ``benchmarks/run.py`` path)
+raises so the harness marks the section failed.
+
+    PYTHONPATH=src python -m benchmarks.run --quick       # CI entry
+    PYTHONPATH=src python -m benchmarks.bench_serve       # standalone
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+
+import numpy as np
+
+from repro.configs.difet_paper import DifetConfig
+from repro.data.landsat import synthetic_scene
+from repro.serve import FeatureService, ServeConfig
+
+ALGS = ("harris", "shi_tomasi")
+TILE, HALO, K = 32, 8, 32
+
+
+class BenchGateError(AssertionError):
+    """A serving CI gate (parity / cache hit-rate) failed."""
+
+
+def _service(max_batch: int, cache_entries: int) -> FeatureService:
+    base = DifetConfig(tile=TILE, halo=HALO, max_keypoints_per_tile=K)
+    svc = FeatureService(ServeConfig(
+        base=base, buckets=(TILE,), max_batch=max_batch,
+        max_batch_delay_s=0.02, max_pending=4096,
+        cache_entries=cache_entries))
+    svc.warmup([ALGS])
+    return svc
+
+
+def _pool(n: int):
+    return [synthetic_scene(TILE, TILE, seed) for seed in range(n)]
+
+
+def _one_pass(svc: FeatureService, pool, sequential: bool):
+    """One workload pass; seconds per request + latency percentiles.
+    ``sequential`` is the one-request-at-a-time baseline: a synchronous
+    client that waits for each response before sending the next (every
+    request pays the full submit→step→respond round trip).  Otherwise an
+    async client submits the whole workload and the scheduler batches
+    continuously."""
+    t0 = time.perf_counter()
+    if sequential:
+        resps = [svc.extract(tile, ALGS, timeout=120) for tile in pool]
+    else:
+        handles = [svc.submit(tile, ALGS, block=True) for tile in pool]
+        resps = [h.result(120) for h in handles]
+    dt = time.perf_counter() - t0
+    lat = np.asarray([r.timing["latency_s"] for r in resps])
+    return dt / len(pool), np.percentile(lat, 50), np.percentile(lat, 99)
+
+
+def run(quick: bool = False, strict: bool = True):
+    import jax
+    from repro.core import engine
+
+    n_unique = 64
+    batches = (8, 32) if quick else (8, 16, 32)
+    repeats = 3 if quick else 4
+    pool = _pool(n_unique)
+    rows = []
+
+    # -- sequential baseline + batched throughput (cache off) ---------------
+    # settings are measured round-robin (best-of across interleaved rounds)
+    # so a noisy-CPU epoch can't land entirely on one setting and skew the
+    # speedup ratio
+    settings = [(1, True)] + [(b, False) for b in batches]
+    services = {b: _service(max_batch=b, cache_entries=0)
+                for b, _ in settings}
+    best = {b: (np.inf, 0.0, 0.0) for b, _ in settings}
+    for _ in range(repeats):
+        for b, sequential in settings:
+            t, p50, p99 = _one_pass(services[b], pool, sequential)
+            if t < best[b][0]:
+                best[b] = (t, p50, p99)
+    t_seq, p50, p99 = best[1]
+    rows.append(("serve/sequential_b1", t_seq * 1e6,
+                 f"req_per_s={1.0 / t_seq:.1f};p50_ms={p50 * 1e3:.2f};"
+                 f"p99_ms={p99 * 1e3:.2f}"))
+    for b in batches:
+        t_b, p50, p99 = best[b]
+        sched = services[b].scheduler.stats()
+        rows.append((f"serve/batched_b{b}", t_b * 1e6,
+                     f"speedup_vs_seq={t_seq / t_b:.2f};"
+                     f"req_per_s={1.0 / t_b:.1f};p50_ms={p50 * 1e3:.2f};"
+                     f"p99_ms={p99 * 1e3:.2f};"
+                     f"mean_batch={sched['mean_batch']:.1f}"))
+    for svc in services.values():
+        svc.close()
+
+    # -- content-hash cache: repeated-tile workload -------------------------
+    svc = _service(max_batch=8, cache_entries=4 * n_unique)
+    for tile in pool:                       # cold pass: all misses
+        svc.submit(tile, ALGS, block=True).result(120)
+    cold = svc.cache.stats()
+    t0 = time.perf_counter()
+    repeat = [svc.submit(tile, ALGS, block=True).result(120)
+              for tile in pool]             # warm pass: must be 100% hits
+    t_hit = (time.perf_counter() - t0) / len(pool)
+    all_cached = all(r.fully_cached for r in repeat)
+    warm = svc.cache.stats()
+    hit_rate_warm = ((warm["hits"] - cold["hits"])
+                     / (len(ALGS) * len(pool)))  # warm-pass probes only
+    rows.append(("serve/cache_repeat", t_hit * 1e6,
+                 f"warm_hit_rate={hit_rate_warm:.2f};"
+                 f"all_cached={all_cached};"
+                 f"speedup_vs_seq={t_seq / t_hit:.1f}"))
+
+    # -- parity gate: served == direct engine call, bit-identical -----------
+    bucket = svc.table.interiors[0]
+    direct_fn = jax.jit(functools.partial(
+        engine.extract_features_multi, algorithms=ALGS,
+        cfg=svc.table.cfg_for(bucket)))
+    n_check = 8 if quick else 16
+    mismatches = []
+    for i in range(n_check):
+        tile, header = svc.table.pad_to_bucket(pool[i], bucket)
+        direct = direct_fn(tile[None], header[None])
+        served = repeat[i].results
+        for alg in ALGS:
+            for key, v in direct[alg].items():
+                a, b2 = np.asarray(v), served[alg][key]
+                if a.shape != b2.shape or not np.array_equal(a, b2):
+                    mismatches.append(f"{i}/{alg}/{key}")
+    parity_ok = not mismatches
+    rows.append(("serve/parity", 0.0,
+                 f"parity_allclose={parity_ok};"
+                 f"checked={n_check}x{len(ALGS)}alg"))
+    rows.append(("serve/compile_cache", 0.0,
+                 f"programs={svc.compile_cache.programs};"
+                 f"keys={len(svc.compile_cache.keys())}"))
+    svc.close()
+
+    if strict:
+        if not parity_ok:
+            raise BenchGateError(
+                f"served results diverged from direct engine calls: "
+                f"{mismatches[:8]}")
+        if not all_cached or hit_rate_warm < 1.0:
+            raise BenchGateError(
+                f"repeated-tile workload not fully cached "
+                f"(warm hit rate {hit_rate_warm:.2f})")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    try:
+        for name, us, derived in run(args.quick, strict=True):
+            print(f"{name},{us:.1f},{derived}")
+    except BenchGateError as e:
+        print(f"serve/GATE,0,ERROR={e}")
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -103,6 +103,14 @@ def bench_matcher(quick):
     return run(quick)
 
 
+def bench_serve(quick):
+    """Serving subsystem: batched-vs-sequential throughput, cache hit-rate,
+    and the served-vs-direct bit-parity gate (strict mode raises on
+    mismatch, failing this section)."""
+    from benchmarks.bench_serve import run
+    return run(quick, strict=True)
+
+
 def bench_lm_step(quick):
     from repro.configs import get_config
     from repro.models import build_model
@@ -153,8 +161,8 @@ def main() -> None:
     failed = False
     print("name,us_per_call,derived")
     for section in (bench_table2, bench_table1, bench_kernels,
-                    bench_scalespace, bench_matcher, bench_lm_step,
-                    bench_roofline):
+                    bench_scalespace, bench_matcher, bench_serve,
+                    bench_lm_step, bench_roofline):
         try:
             for name, us, derived in section(args.quick):
                 rows.append((name, us, derived))

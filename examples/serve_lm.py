@@ -11,7 +11,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serve import greedy_generate
+from repro.serve.lm import greedy_generate
 
 for arch in ("smollm-135m", "xlstm-350m", "zamba2-2.7b"):
     cfg = get_config(arch).reduced().replace(remat="nothing")

@@ -83,6 +83,29 @@ ALGORITHMS: Dict[str, AlgorithmSpec] = {
 }
 
 
+def normalize_algorithms(spec) -> tuple:
+    """Canonicalize an algorithm selection: accepts a comma-separated string
+    or a sequence of names, strips whitespace, drops duplicates (first
+    occurrence wins), and rejects unknown names with the valid choices
+    spelled out.  Shared by the CLI drivers and the serving API so both
+    fail the same way."""
+    names = spec.split(",") if isinstance(spec, str) else list(spec)
+    valid = ", ".join(sorted(ALGORITHMS))
+    out = []
+    for raw in names:
+        name = raw.strip()
+        if not name:
+            continue
+        if name not in ALGORITHMS:
+            raise ValueError(
+                f"unknown algorithm {name!r}; valid choices: {valid}")
+        if name not in out:
+            out.append(name)
+    if not out:
+        raise ValueError(f"no algorithms selected; valid choices: {valid}")
+    return tuple(out)
+
+
 def _select_and_describe(spec: AlgorithmSpec, cfg: DifetConfig, tile, header,
                          resp):
     """NMS → capacity-K selection → describe, given a precomputed response
@@ -179,6 +202,41 @@ def extract_features_multi(bundle_tiles, bundle_headers, algorithms,
                           use_pallas=use_pallas))(
         bundle_tiles, bundle_headers)
     return {alg: _reduce_features(per_tile[alg]) for alg in algorithms}
+
+
+def extract_request_features(bundle_tiles, bundle_headers, algorithms,
+                             cfg: DifetConfig, use_pallas: bool = False):
+    """Serving-path extraction: per-REQUEST results at batch shape.
+
+    ``extract_features_multi`` reduces across the whole batch (one job, many
+    tiles); here every batch row is an independent service request, so the
+    reduce runs per tile over its own [1, K] candidate set.  Per-tile values
+    are batch-invariant — each row runs the same elementwise program
+    regardless of its neighbours or position — so a request's result is
+    bit-identical to a direct single-tile ``extract_features_multi`` call no
+    matter which batch the scheduler rode it in (asserted by the
+    ``benchmarks/bench_serve.py`` parity gate and
+    ``tests/test_serve.py::test_served_parity``)."""
+    algorithms = tuple(algorithms)
+    per_tile = jax.vmap(
+        functools.partial(extract_tile_multi, algorithms, cfg,
+                          use_pallas=use_pallas))(
+        bundle_tiles, bundle_headers)
+
+    def _single(tree):
+        return _reduce_features(
+            jax.tree_util.tree_map(lambda a: a[None], tree))
+
+    return {alg: jax.vmap(_single)(per_tile[alg]) for alg in algorithms}
+
+
+def make_serve_step(algorithms, cfg: DifetConfig, use_pallas: bool = False):
+    """jit-compiled serving step for one (shape bucket, algorithm set) pair.
+    The scheduler always pads batches to a fixed size, so each pair
+    compiles exactly once (`serve/buckets.py::CompileCache`)."""
+    return jax.jit(functools.partial(
+        extract_request_features, algorithms=tuple(algorithms), cfg=cfg,
+        use_pallas=use_pallas))
 
 
 def make_distributed_extractor(algorithm: str, cfg: DifetConfig, mesh,

@@ -12,6 +12,7 @@ import time
 
 from repro.configs.difet_paper import DifetConfig, PAPER_ALGORITHMS
 from repro.core.bundle import BundleStore, bundle_scenes
+from repro.core.engine import normalize_algorithms
 from repro.core.job import DifetJob
 from repro.data.landsat import synthetic_scene
 
@@ -46,10 +47,13 @@ def main(argv=None):
                     help="simulate worker failure after N bundles")
     args = ap.parse_args(argv)
 
-    algorithm = args.algorithms or args.algorithm
-    for alg in algorithm.split(","):
-        if alg.strip() not in PAPER_ALGORITHMS:
-            ap.error(f"unknown algorithm {alg.strip()!r}")
+    # canonicalize: strip whitespace, drop repeats (first occurrence wins),
+    # reject unknown names with the valid choices listed
+    try:
+        algorithm = ",".join(normalize_algorithms(args.algorithms
+                                                  or args.algorithm))
+    except ValueError as e:
+        ap.error(str(e))
     cfg = DifetConfig(tile=args.tile, halo=24, max_keypoints_per_tile=256)
     store = build_store(args.store, args.scenes,
                         (args.scene_size, args.scene_size), cfg)

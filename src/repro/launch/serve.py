@@ -1,0 +1,226 @@
+"""DIFET serving driver: in-process feature service + synthetic load
+generator (the online analogue of ``launch/extract.py``'s batch job).
+
+Closed loop: ``--concurrency`` client threads each submit a request and
+wait for it — models downstream consumers like the stitching pipeline.
+Open loop: requests are injected at a fixed ``--rate`` regardless of
+completions — models public traffic; queue overflow is load-shed
+(:class:`ServiceOverloaded` counted as rejected, the backpressure knob).
+
+The tile pool has ``--unique-tiles`` distinct tiles cycled over
+``--requests`` requests, so repeats exercise the content-hash result
+cache exactly the way recurring LandSat granules would.
+
+    PYTHONPATH=src python -m repro.launch.serve --requests 96 --batch 8
+    PYTHONPATH=src python -m repro.launch.serve --mode open --rate 500
+    PYTHONPATH=src python -m repro.launch.serve --smoke      # CI gate
+"""
+from __future__ import annotations
+
+import argparse
+import threading
+import time
+
+import numpy as np
+
+from repro.configs.difet_paper import DifetConfig
+from repro.core.engine import normalize_algorithms
+from repro.data.landsat import synthetic_scene
+from repro.serve import FeatureService, ServeConfig, ServiceOverloaded
+
+
+def build_service(args) -> FeatureService:
+    halo = 8 if args.tile_size <= 32 else 16
+    base = DifetConfig(tile=args.tile_size, halo=halo,
+                       max_keypoints_per_tile=args.max_keypoints)
+    cfg = ServeConfig(base=base, buckets=(args.tile_size,),
+                      max_batch=args.batch,
+                      max_batch_delay_s=args.delay_ms * 1e-3,
+                      max_pending=args.max_pending,
+                      cache_entries=args.cache_entries)
+    return FeatureService(cfg)
+
+
+def make_pool(args):
+    return [synthetic_scene(args.tile_size, args.tile_size, args.seed + i)
+            for i in range(args.unique_tiles)]
+
+
+def run_closed(svc, pool, algs, n_requests, concurrency):
+    """Closed-loop: each worker submits, waits, repeats.  A failed request
+    fails the run — a load generator must not mistake a dying service for
+    a fast one."""
+    latencies = [0.0] * n_requests
+    it = iter(range(n_requests))
+    lock = threading.Lock()
+    errors = []
+
+    def worker():
+        while not errors:
+            with lock:
+                i = next(it, None)
+            if i is None:
+                return
+            t0 = time.perf_counter()
+            try:
+                svc.submit(pool[i % len(pool)], algs,
+                           block=True).result(60)
+            except Exception as e:  # noqa: BLE001 — surfaced after join
+                errors.append((i, e))
+                return
+            latencies[i] = time.perf_counter() - t0
+
+    threads = [threading.Thread(target=worker)
+               for _ in range(min(concurrency, n_requests))]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    if errors:
+        i, e = errors[0]
+        raise RuntimeError(
+            f"{len(errors)} request(s) failed (first: #{i}: {e!r})") from e
+    return time.perf_counter() - t0, latencies, 0
+
+
+def run_open(svc, pool, algs, n_requests, rate):
+    """Open-loop: inject at a fixed rate; overload is shed, not queued."""
+    period = 1.0 / rate
+    handles, submit_ts, rejected = [], [], 0
+    t0 = time.perf_counter()
+    for i in range(n_requests):
+        target = t0 + i * period
+        now = time.perf_counter()
+        if target > now:
+            time.sleep(target - now)
+        try:
+            submit_ts.append(time.perf_counter())
+            handles.append(svc.submit(pool[i % len(pool)], algs))
+        except ServiceOverloaded:
+            submit_ts.pop()
+            rejected += 1
+    latencies = []
+    for ts, h in zip(submit_ts, handles):
+        h.result(60)
+        latencies.append(time.perf_counter() - ts)
+    return time.perf_counter() - t0, latencies, rejected
+
+
+def report(label, wall, latencies, rejected, svc):
+    lat = np.asarray([l for l in latencies if l > 0.0])
+    stats = svc.stats()
+    served = len(lat)
+    print(f"[{label}] {served} served, {rejected} rejected in {wall:.2f}s "
+          f"-> {served / wall:.1f} req/s")
+    if served:
+        print(f"  latency p50={np.percentile(lat, 50) * 1e3:.2f} ms  "
+              f"p99={np.percentile(lat, 99) * 1e3:.2f} ms")
+    cache = stats["cache"]
+    print(f"  cache hit-rate={cache['hit_rate']:.2f} "
+          f"({cache['hits']} hits / {cache['misses']} misses, "
+          f"{cache['entries']} entries)")
+    print(f"  programs={stats['programs']} "
+          f"batches={stats['scheduler']['batches']} "
+          f"mean_batch={stats['scheduler']['mean_batch']:.1f} "
+          f"hist={stats['scheduler']['batch_size_hist']}")
+    return stats
+
+
+def smoke(args) -> int:
+    """CI smoke: in-process service, mixed-algorithm requests; assert
+    responses, 100% cache hits on the repeat pass, and served-vs-direct
+    parity.  Non-zero exit on any failure."""
+    import functools
+    import jax
+    from repro.core import engine
+
+    svc = build_service(args)
+    algsets = [("harris",), ("harris", "shi_tomasi")]
+    svc.warmup(algsets)
+    pool = make_pool(args)
+    failures = []
+
+    # mixed-algorithm traffic
+    t0 = time.perf_counter()
+    handles = [svc.submit(pool[i % len(pool)], algsets[i % len(algsets)])
+               for i in range(2 * len(pool))]
+    resps = [h.result(60) for h in handles]
+    wall = time.perf_counter() - t0
+    if not all(int(r.results[a]["total_count"]) >= 0
+               for r in resps for a in r.algorithms):
+        failures.append("bad response payload")
+
+    # repeat pass: every (tile, algorithm) pair must come from cache
+    repeat = [svc.submit(pool[i % len(pool)], algsets[i % len(algsets)])
+              .result(60) for i in range(2 * len(pool))]
+    if not all(r.fully_cached for r in repeat):
+        failures.append(f"repeat pass not fully cached: "
+                        f"{[r.cached for r in repeat if not r.fully_cached]}")
+
+    # parity: served == direct extract_features_multi, bit-identical
+    bucket = svc.table.interiors[0]
+    tile, header = svc.table.pad_to_bucket(pool[0], bucket)
+    direct = jax.jit(functools.partial(
+        engine.extract_features_multi, algorithms=algsets[1],
+        cfg=svc.table.cfg_for(bucket)))(tile[None], header[None])
+    served = svc.submit(pool[0], algsets[1]).result(60).results
+    for alg in algsets[1]:
+        for k, v in direct[alg].items():
+            a, b = np.asarray(v), served[alg][k]
+            if a.shape != b.shape or not np.array_equal(a, b):
+                failures.append(f"parity mismatch {alg}/{k}")
+
+    report("smoke", wall, [r.timing["latency_s"] for r in resps], 0, svc)
+    svc.close()
+    if failures:
+        print("SMOKE FAILED:", "; ".join(failures))
+        return 1
+    print("smoke ok")
+    return 0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--algorithms", default="harris,shi_tomasi")
+    ap.add_argument("--mode", choices=("closed", "open"), default="closed")
+    ap.add_argument("--requests", type=int, default=96)
+    ap.add_argument("--concurrency", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=500.0,
+                    help="open-loop injection rate (req/s)")
+    ap.add_argument("--tile-size", type=int, default=32)
+    ap.add_argument("--unique-tiles", type=int, default=16,
+                    help="distinct tiles in the pool; repeats hit the cache")
+    ap.add_argument("--max-keypoints", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--delay-ms", type=float, default=2.0)
+    ap.add_argument("--max-pending", type=int, default=256)
+    ap.add_argument("--cache-entries", type=int, default=1024)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke mode: assertions + non-zero exit")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        raise SystemExit(smoke(args))
+
+    try:
+        algs = normalize_algorithms(args.algorithms)
+    except ValueError as e:
+        ap.error(str(e))
+    svc = build_service(args)
+    print(f"[serve] warmup: {svc.warmup([algs])} program(s) "
+          f"(bucket {args.tile_size}, batch {args.batch})")
+    pool = make_pool(args)
+    if args.mode == "closed":
+        wall, lat, rej = run_closed(svc, pool, algs, args.requests,
+                                    args.concurrency)
+    else:
+        wall, lat, rej = run_open(svc, pool, algs, args.requests, args.rate)
+    stats = report(args.mode, wall, lat, rej, svc)
+    svc.close()
+    return stats
+
+
+if __name__ == "__main__":
+    main()

@@ -1,1 +1,14 @@
-from repro.serve.step import make_prefill_fn, make_decode_fn, greedy_generate  # noqa: F401
+"""DIFET feature-extraction serving subsystem (DESIGN.md §8).
+
+``FeatureService`` is the facade: request/response model in ``api.py``,
+continuous-batching scheduler in ``scheduler.py``, shape buckets + the
+per-(bucket, algorithm-set) compile cache in ``buckets.py``, and the
+content-hash LRU result cache in ``cache.py``.  The LM-substrate decode
+helpers live in ``serve/lm.py``.
+"""
+from repro.serve.api import (FeatureService, ServeConfig, ExtractResponse,  # noqa: F401
+                             ResponseHandle, ServiceOverloaded, tile_digest,
+                             config_digest, encode_tile, decode_tile)
+from repro.serve.buckets import BucketTable, CompileCache, warmup  # noqa: F401
+from repro.serve.cache import ResultCache  # noqa: F401
+from repro.serve.scheduler import BatchScheduler, WorkItem  # noqa: F401

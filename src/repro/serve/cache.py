@@ -1,0 +1,103 @@
+"""Content-hash LRU result cache for the feature service.
+
+LandSat tiles recur across scenes and across requests (overlapping scene
+footprints, re-submitted work, mosaics sharing source granules), and
+feature extraction is deterministic — so repeated extraction is pure
+waste.  The cache is keyed by ``(tile_digest, algorithm, config_digest)``
+(`serve/api.py::tile_digest` / `config_digest`):
+
+* the tile digest hashes the exact padded pixel bytes + shape + dtype, so
+  any content change is a miss;
+* the algorithm is part of the key, so one tile's SIFT and FAST results
+  are independent entries (a request for a superset of algorithms reuses
+  the per-algorithm entries it already has);
+* the config digest folds every ``DifetConfig`` field plus the
+  ``use_pallas`` flag, so a threshold/geometry/backend change can never
+  alias a stale result (collision-safety is tested).
+
+Values are per-request feature dicts (numpy leaves) frozen read-only on
+insert: cache hits hand out the stored arrays without copying, and the
+freeze guarantees no consumer can corrupt a shared entry.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Dict, Optional
+
+import numpy as np
+
+
+def freeze(tree: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+    """Own + freeze a feature dict: contiguous copies (detached from any
+    batch buffer the scheduler will reuse) marked non-writeable."""
+    out = {}
+    for k, v in tree.items():
+        # NOT ascontiguousarray: that silently promotes 0-d leaves
+        # (total_count, keypoint_count) to shape (1,)
+        a = np.array(v, order="C")       # always an owned copy
+        a.setflags(write=False)
+        out[k] = a
+    return out
+
+
+class ResultCache:
+    """Thread-safe LRU over feature-result dicts.
+
+    ``capacity`` counts entries (one per (tile, algorithm, config) key);
+    0 disables the cache entirely (every get is a miss, puts are dropped)
+    — the throughput benchmark uses that to measure honest batching wins.
+    """
+
+    def __init__(self, capacity: int):
+        self.capacity = int(capacity)
+        self._d: "OrderedDict[tuple, Dict[str, np.ndarray]]" = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.inserts = 0
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._d)
+
+    def get(self, key) -> Optional[Dict[str, np.ndarray]]:
+        with self._lock:
+            if key in self._d:
+                self._d.move_to_end(key)
+                self.hits += 1
+                return self._d[key]
+            self.misses += 1
+            return None
+
+    def put(self, key, value: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        """Insert (refreshing recency) and return the frozen stored value."""
+        frozen = freeze(value)
+        if self.capacity <= 0:
+            return frozen
+        with self._lock:
+            if key in self._d:
+                self._d.move_to_end(key)
+            self._d[key] = frozen
+            self.inserts += 1
+            while len(self._d) > self.capacity:
+                self._d.popitem(last=False)      # evict least-recently-used
+                self.evictions += 1
+            return frozen
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+    def keys(self):
+        with self._lock:
+            return list(self._d)
+
+    def stats(self) -> Dict[str, float]:
+        with self._lock:
+            return {"entries": len(self._d), "capacity": self.capacity,
+                    "hits": self.hits, "misses": self.misses,
+                    "evictions": self.evictions, "inserts": self.inserts,
+                    "hit_rate": self.hit_rate}

@@ -1,5 +1,7 @@
-"""Serving: prefill + single-token decode steps (KV-cache donation) and a
-simple batched greedy generation loop for the example drivers."""
+"""LM-substrate serving helpers: prefill + single-token decode steps
+(KV-cache donation) and a simple batched greedy generation loop for the
+example drivers.  (Moved out of ``serve/step.py`` — ``repro.serve`` proper
+is the DIFET tile-serving subsystem, see ``serve/api.py``.)"""
 from __future__ import annotations
 
 import jax

@@ -1,0 +1,177 @@
+"""Continuous-batching scheduler for the feature service.
+
+Requests arrive one tile at a time; the device wants full batches.  The
+scheduler keeps a FIFO of pending work items, and a single runner thread
+repeatedly forms the next batch: it takes the *oldest* pending item, whose
+``(bucket, algorithm-set)`` group keys the step, waits until either
+``max_batch`` same-group items are pending or the head item has aged past
+``max_batch_delay_s`` (the latency/throughput knob), then pops up to
+``max_batch`` group members in arrival order and hands them to the runner
+callback — which pads the batch to the fixed device shape and runs the
+bucket's compiled program.  While a device step executes, new arrivals
+keep queueing, so the next batch forms the moment the step returns:
+continuous batching, no generation barriers.
+
+Backpressure: at most ``max_pending`` items may be queued; beyond that
+``submit`` raises :class:`ServiceOverloaded` (or blocks when asked to),
+so a slow device surfaces as load-shedding at the edge instead of an
+unbounded queue.
+
+Determinism: batches are formed in arrival (seq) order, and per-request
+results are batch-invariant (`core/engine.py::extract_request_features`),
+so the *same request set in any arrival order yields bit-identical
+per-request results* — tested in ``tests/test_serve.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+class ServiceOverloaded(RuntimeError):
+    """Raised by ``submit`` when the pending queue is at ``max_pending``."""
+
+
+@dataclasses.dataclass
+class WorkItem:
+    """One tile awaiting a device step.  ``future`` resolves to the
+    per-algorithm feature dict for this tile; ``digest``/``cfg_digest``
+    ride along so the runner can insert results into the result cache."""
+    seq: int
+    tile: np.ndarray                 # [hw, hw] float32, bucket-padded
+    header: np.ndarray               # [6] int32
+    bucket: int
+    algorithms: Tuple[str, ...]
+    digest: str
+    cfg_digest: str
+    future: Future
+    enqueued_at: float = 0.0
+    batch_size: int = 0              # filled by the runner
+
+    @property
+    def group_key(self) -> tuple:
+        return (self.bucket, self.algorithms)
+
+
+class BatchScheduler:
+    """Single-runner continuous batcher over :class:`WorkItem` queues."""
+
+    def __init__(self, run_batch: Callable[[int, Tuple[str, ...],
+                                            Sequence[WorkItem]], None],
+                 *, max_batch: int = 8, max_batch_delay_s: float = 0.002,
+                 max_pending: int = 1024, name: str = "difet-serve"):
+        self._run_batch = run_batch
+        self.max_batch = int(max_batch)
+        self.max_batch_delay_s = float(max_batch_delay_s)
+        self.max_pending = int(max_pending)
+        self._cv = threading.Condition()
+        self._pending: List[WorkItem] = []
+        self._seq = 0
+        self._stopping = False
+        self.batches = 0
+        self.items = 0
+        self.rejected = 0
+        self.batch_size_hist: Dict[int, int] = {}
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name=name)
+        self._thread.start()
+
+    # ---- client side -------------------------------------------------------
+    def submit(self, tile, header, bucket, algorithms, digest="",
+               cfg_digest="", block: bool = False,
+               timeout: Optional[float] = None) -> Future:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            while len(self._pending) >= self.max_pending:
+                if not block:
+                    self.rejected += 1
+                    raise ServiceOverloaded(
+                        f"{len(self._pending)} tiles pending "
+                        f"(max_pending={self.max_pending})")
+                rem = None if deadline is None else deadline - time.monotonic()
+                if rem is not None and rem <= 0:
+                    self.rejected += 1
+                    raise ServiceOverloaded("timed out waiting for queue room")
+                self._cv.wait(rem)
+            if self._stopping:
+                raise RuntimeError("scheduler is stopped")
+            item = WorkItem(seq=self._seq, tile=np.asarray(tile, np.float32),
+                            header=np.asarray(header, np.int32),
+                            bucket=int(bucket),
+                            algorithms=tuple(algorithms), digest=digest,
+                            cfg_digest=cfg_digest, future=Future(),
+                            enqueued_at=time.monotonic())
+            self._seq += 1
+            self._pending.append(item)
+            self._cv.notify_all()
+            return item.future
+
+    @property
+    def queue_depth(self) -> int:
+        with self._cv:
+            return len(self._pending)
+
+    # ---- runner side -------------------------------------------------------
+    def _take_batch(self) -> Tuple[tuple, List[WorkItem]]:
+        """Form the next batch (called with the lock held, queue non-empty):
+        oldest item keys the group; wait for fill or the head's deadline."""
+        head = self._pending[0]
+        key = head.group_key
+        deadline = head.enqueued_at + self.max_batch_delay_s
+        while not self._stopping:
+            group = [it for it in self._pending if it.group_key == key]
+            if len(group) >= self.max_batch:
+                break
+            rem = deadline - time.monotonic()
+            if rem <= 0:
+                break
+            self._cv.wait(rem)
+        group = [it for it in self._pending
+                 if it.group_key == key][:self.max_batch]
+        taken = {it.seq for it in group}
+        self._pending = [it for it in self._pending if it.seq not in taken]
+        return key, group
+
+    def _loop(self):
+        while True:
+            with self._cv:
+                while not self._pending and not self._stopping:
+                    self._cv.wait()
+                if not self._pending and self._stopping:
+                    return
+                (bucket, algorithms), batch = self._take_batch()
+                self.batches += 1
+                self.items += len(batch)
+                self.batch_size_hist[len(batch)] = \
+                    self.batch_size_hist.get(len(batch), 0) + 1
+                self._cv.notify_all()          # wake backpressure waiters
+            for it in batch:
+                it.batch_size = len(batch)
+            try:
+                self._run_batch(bucket, algorithms, batch)
+            except BaseException as e:  # noqa: BLE001 — fail the batch, not the service
+                for it in batch:
+                    if not it.future.done():
+                        it.future.set_exception(e)
+
+    def stop(self, timeout: Optional[float] = None):
+        """Drain the queue, then stop the runner thread."""
+        with self._cv:
+            self._stopping = True
+            self._cv.notify_all()
+        self._thread.join(timeout)
+
+    def stats(self) -> Dict[str, object]:
+        with self._cv:
+            return {"batches": self.batches, "items": self.items,
+                    "rejected": self.rejected,
+                    "queue_depth": len(self._pending),
+                    "batch_size_hist": dict(sorted(
+                        self.batch_size_hist.items())),
+                    "mean_batch": (self.items / self.batches
+                                   if self.batches else 0.0)}

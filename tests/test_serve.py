@@ -1,0 +1,317 @@
+"""Serving subsystem: buckets, LRU cache, scheduler, service parity,
+determinism (DESIGN.md §8)."""
+import functools
+import threading
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.difet_paper import DifetConfig
+from repro.core import engine
+from repro.core.bundle import tile_scene
+from repro.core.job import DifetJob
+from repro.data.landsat import synthetic_scene
+from repro.serve import (BatchScheduler, BucketTable, FeatureService,
+                         ResultCache, ServeConfig, ServiceOverloaded,
+                         config_digest, encode_tile, tile_digest)
+
+BASE = DifetConfig(tile=32, halo=8, max_keypoints_per_tile=16)
+ALGS = ("harris", "shi_tomasi")
+
+
+def make_service(max_batch=4, cache_entries=128, buckets=(32,),
+                 max_pending=1024):
+    return FeatureService(ServeConfig(
+        base=BASE, buckets=buckets, max_batch=max_batch,
+        max_batch_delay_s=0.005, max_pending=max_pending,
+        cache_entries=cache_entries))
+
+
+@pytest.fixture(scope="module")
+def service():
+    svc = make_service()
+    yield svc
+    svc.close()
+
+
+# ---- algorithm normalization (shared with launch/extract.py) --------------
+
+def test_normalize_algorithms_dedupes_preserving_order():
+    assert engine.normalize_algorithms("fast, brief,fast,orb") == \
+        ("fast", "brief", "orb")
+    assert engine.normalize_algorithms(("harris",)) == ("harris",)
+
+
+def test_normalize_algorithms_rejects_unknown_listing_choices():
+    with pytest.raises(ValueError) as e:
+        engine.normalize_algorithms("harris,bogus")
+    msg = str(e.value)
+    assert "bogus" in msg
+    for name in engine.ALGORITHMS:
+        assert name in msg          # the error spells out valid choices
+    with pytest.raises(ValueError):
+        engine.normalize_algorithms(" , ")
+
+
+# ---- buckets ---------------------------------------------------------------
+
+def test_bucket_selection():
+    table = BucketTable((32, 64, 128), BASE)
+    assert table.bucket_for(20, 31) == 32
+    assert table.bucket_for(32, 33) == 64
+    assert table.bucket_for(65, 10) == 128
+    assert table.bucket_for(129, 5) is None     # oversize → scene split
+
+
+def test_pad_to_bucket_matches_tile_scene_bitwise(rng):
+    table = BucketTable((32, 64), BASE)
+    for h, w, bucket in [(32, 32, 32), (30, 25, 32), (33, 20, 64),
+                         (9, 64, 64)]:
+        gray = rng.rand(h, w).astype(np.float32)
+        tile, header = table.pad_to_bucket(gray, bucket)
+        ref = tile_scene(gray, table.cfg_for(bucket))
+        assert np.array_equal(tile, ref.tiles[0])
+        assert np.array_equal(header, ref.headers[0])
+
+
+def test_pad_to_bucket_sub_halo_tiles_use_multibounce_fallback(rng):
+    table = BucketTable((32,), BASE)      # halo 8
+    gray = rng.rand(5, 32).astype(np.float32)   # side < halo: np.pad path
+    tile, header = table.pad_to_bucket(gray, 32)
+    ref = tile_scene(gray, table.cfg_for(32))
+    assert np.array_equal(tile, ref.tiles[0])
+    assert np.array_equal(header, ref.headers[0])
+    with pytest.raises(ValueError, match="too small"):
+        table.pad_to_bucket(rng.rand(1, 32).astype(np.float32), 32)
+
+
+# ---- result cache ----------------------------------------------------------
+
+def _entry(i):
+    return {"top_scores": np.full((4,), float(i), np.float32)}
+
+
+def test_cache_lru_eviction_order():
+    c = ResultCache(capacity=3)
+    for k in "abc":
+        c.put(k, _entry(0))
+    assert c.get("a") is not None        # refresh 'a': LRU order b, c, a
+    c.put("d", _entry(1))                # evicts 'b'
+    assert c.get("b") is None
+    assert c.get("a") is not None and c.get("c") is not None
+    assert c.get("d") is not None
+    assert c.evictions == 1 and len(c) == 3
+
+
+def test_cache_entries_are_frozen_copies():
+    c = ResultCache(capacity=2)
+    src = {"x": np.ones((3,), np.float32)}
+    stored = c.put("k", src)
+    src["x"][0] = 99.0                   # caller mutation can't reach cache
+    assert c.get("k")["x"][0] == 1.0
+    with pytest.raises(ValueError):
+        stored["x"][0] = 5.0             # read-only
+    assert c.get("k")["x"].shape == (3,)
+    zero_d = c.put("z", {"n": np.int32(7)})
+    assert zero_d["n"].shape == ()       # 0-d leaves stay 0-d
+
+
+def test_cache_capacity_zero_disables():
+    c = ResultCache(capacity=0)
+    c.put("k", _entry(0))
+    assert c.get("k") is None and len(c) == 0
+
+
+def test_config_digest_collision_safety():
+    d1 = config_digest(BASE, use_pallas=False)
+    assert config_digest(BASE, use_pallas=False) == d1
+    # any config field change or backend flip must change the key
+    import dataclasses
+    assert config_digest(dataclasses.replace(BASE, harris_k=0.05)) != d1
+    assert config_digest(dataclasses.replace(BASE, tile=64)) != d1
+    assert config_digest(BASE, use_pallas=True) != d1
+    c = ResultCache(capacity=8)
+    c.put((tile_digest(np.zeros((4, 4))), "harris", d1), _entry(0))
+    other = config_digest(dataclasses.replace(BASE, harris_k=0.05))
+    assert c.get((tile_digest(np.zeros((4, 4))), "harris", other)) is None
+
+
+# ---- service: parity, cache, partial hits ----------------------------------
+
+def _direct(table, gray, algs):
+    bucket = table.bucket_for(*gray.shape)
+    tile, header = table.pad_to_bucket(gray, bucket)
+    fn = jax.jit(functools.partial(engine.extract_features_multi,
+                                   algorithms=algs, cfg=table.cfg_for(bucket)))
+    return {alg: {k: np.asarray(v) for k, v in res.items()}
+            for alg, res in fn(tile[None], header[None]).items()}
+
+
+def assert_results_equal(a, b):
+    assert set(a) == set(b)
+    for alg in a:
+        assert set(a[alg]) == set(b[alg])
+        for k in a[alg]:
+            x, y = np.asarray(a[alg][k]), np.asarray(b[alg][k])
+            assert x.shape == y.shape and x.dtype == y.dtype, (alg, k)
+            assert np.array_equal(x, y), (alg, k)
+
+
+def test_served_parity(service):
+    """Served results are bit-identical to direct engine calls, whatever
+    batch the scheduler rode them in."""
+    tiles = [synthetic_scene(32, 32, s) for s in range(6)]
+    resps = [h.result(60) for h in
+             [service.submit(t, ALGS) for t in tiles]]
+    for t, r in zip(tiles, resps):
+        assert_results_equal(_direct(service.table, t, ALGS), r.results)
+        assert r.n_tiles == 1 and r.bucket == 32
+        assert r.timing["latency_s"] >= 0.0
+        assert r.timing["batch_sizes"] and r.timing["batch_sizes"][0] >= 1
+
+
+def test_repeat_requests_served_from_cache(service):
+    tile = synthetic_scene(32, 32, 77)
+    first = service.extract(tile, ALGS, timeout=60)
+    assert not first.fully_cached
+    hits_before = service.cache.hits
+    again = service.extract(tile, ALGS, timeout=60)
+    assert again.fully_cached
+    assert again.cached == {a: 1.0 for a in ALGS}
+    assert service.cache.hits >= hits_before + len(ALGS)
+    assert_results_equal(first.results, again.results)
+
+
+def test_partial_algorithm_cache_hit(service):
+    tile = synthetic_scene(32, 32, 123)
+    service.extract(tile, ("harris",), timeout=60)
+    r = service.extract(tile, ALGS, timeout=60)   # harris cached, shi fresh
+    assert r.cached["harris"] == 1.0 and r.cached["shi_tomasi"] == 0.0
+    assert_results_equal(_direct(service.table, tile, ALGS), r.results)
+
+
+def test_wire_format_and_scene_id(service):
+    tile = synthetic_scene(32, 32, 5)
+    via_bytes = service.extract(encode_tile(tile), ("harris",), timeout=60)
+    service.register_scene("granule-5", tile)
+    via_id = service.extract("granule-5", ("harris",), timeout=60)
+    assert_results_equal(via_bytes.results, via_id.results)
+    with pytest.raises(KeyError):
+        service.submit("nope", ("harris",))
+
+
+def test_scene_request_splits_and_merges(service):
+    """Oversize image → largest-bucket tiles, merged with the batch job's
+    reduce; bit-identical to the jitted per-tile reference."""
+    scene = synthetic_scene(70, 70, 9)
+    cfg = service.table.cfg_for(32)
+    b = tile_scene(scene, cfg)
+    fn = jax.jit(functools.partial(engine.extract_request_features,
+                                   algorithms=("harris",), cfg=cfg))
+    per = {k: np.asarray(v)
+           for k, v in fn(b.tiles, b.headers)["harris"].items()}
+    want = DifetJob._merge([{k: v[i] for k, v in per.items()}
+                            for i in range(len(b))])
+    r = service.submit(scene, "harris").result(60)
+    assert r.n_tiles == len(b) == 9
+    assert_results_equal({"harris": want}, r.results)
+
+
+def test_algorithm_order_canonicalized_one_program():
+    """Permuted algorithm lists share one compiled program and batch
+    group; the response still reports the request's order."""
+    svc = make_service(max_batch=4, cache_entries=64)
+    try:
+        r1 = svc.extract(synthetic_scene(32, 32, 200),
+                         ("shi_tomasi", "harris"), timeout=60)
+        r2 = svc.extract(synthetic_scene(32, 32, 201),
+                         ("harris", "shi_tomasi"), timeout=60)
+        assert r1.algorithms == ("shi_tomasi", "harris")
+        assert r2.algorithms == ("harris", "shi_tomasi")
+        assert svc.compile_cache.keys() == [(32, ("harris", "shi_tomasi"))]
+        assert_results_equal(
+            _direct(svc.table, synthetic_scene(32, 32, 200),
+                    ("shi_tomasi", "harris")), r1.results)
+    finally:
+        svc.close()
+
+
+def test_warmup_compiles_each_pair_exactly_once():
+    svc = make_service(max_batch=2, cache_entries=0)
+    try:
+        assert svc.warmup([("harris",)]) == 1
+        assert svc.warmup([("harris",)]) == 1     # idempotent
+        for s in range(3):
+            svc.extract(synthetic_scene(32, 32, s), ("harris",), timeout=60)
+        assert svc.compile_cache.programs == 1    # traffic added no programs
+        assert svc.compile_cache.keys() == [(32, ("harris",))]
+    finally:
+        svc.close()
+
+
+# ---- determinism -----------------------------------------------------------
+
+def test_arrival_order_determinism():
+    """The same request set in different arrival orders (different batch
+    partitions) yields bit-identical per-request results."""
+    tiles = [synthetic_scene(32, 32, 40 + s) for s in range(10)]
+    orders = [list(range(10)), [9, 3, 1, 7, 5, 0, 8, 2, 6, 4]]
+    outcomes = []
+    for order in orders:
+        svc = make_service(max_batch=4, cache_entries=0)
+        try:
+            handles = {i: svc.submit(tiles[i], ("harris",)) for i in order}
+            outcomes.append({i: handles[i].result(60).results
+                             for i in order})
+        finally:
+            svc.close()
+    for i in range(10):
+        assert_results_equal(outcomes[0][i], outcomes[1][i])
+
+
+# ---- scheduler: backpressure + coalescing ----------------------------------
+
+def test_scheduler_backpressure():
+    release = threading.Event()
+    done = []
+
+    def blocking_runner(bucket, algs, items):
+        release.wait(30)
+        for it in items:
+            it.future.set_result(("ok", it.batch_size))
+            done.append(it.seq)
+
+    sched = BatchScheduler(blocking_runner, max_batch=1,
+                           max_batch_delay_s=0.0, max_pending=2)
+    tile = np.zeros((4, 4), np.float32)
+    header = np.zeros((6,), np.int32)
+    futures, rejected = [], 0
+    for _ in range(6):
+        try:
+            futures.append(sched.submit(tile, header, 4, ("harris",)))
+        except ServiceOverloaded:
+            rejected += 1
+    assert rejected >= 1                      # queue bounded, load shed
+    assert sched.stats()["rejected"] == rejected
+    release.set()
+    for f in futures:
+        assert f.result(30)[0] == "ok"        # accepted work still completes
+    sched.stop(10)
+
+
+def test_concurrent_identical_requests_coalesce():
+    """Two in-flight requests for the same (tile, algorithms) share one
+    device computation."""
+    svc = make_service(max_batch=4, cache_entries=128)
+    try:
+        svc.warmup([("harris",)])
+        tile = synthetic_scene(32, 32, 314)
+        h1 = svc.submit(tile, ("harris",))
+        h2 = svc.submit(tile, ("harris",))
+        r1, r2 = h1.result(60), h2.result(60)
+        assert_results_equal(r1.results, r2.results)
+        assert svc.scheduler.items == 1       # one WorkItem served both
+    finally:
+        svc.close()

@@ -7,7 +7,7 @@ import pytest
 from repro.configs import get_config
 from repro.models import build_model
 from repro.optim import AdamW
-from repro.serve import greedy_generate
+from repro.serve.lm import greedy_generate
 from repro.train.step import make_train_step, make_init_fn, TrainStepConfig
 from repro.data.tokens import synthetic_lm_batch
 
