@@ -23,13 +23,27 @@ def _bench(fn, *args, repeats=3):
 
 
 def bench_table1(quick):
-    from benchmarks.table1_scalability import run
-    rows = run(n_scenes=2 if quick else 3, scene=256 if quick else 512,
-               repeats=1 if quick else 3)
+    """Streaming-ingest worker sweep (one row per algorithm × worker
+    count, so the whole speedup/efficiency curve lands in the BENCH
+    snapshot) + the hard scalability gate: bit-parity at every worker
+    count and ≥1.6x at 2 workers for the anchor algorithm — a gate
+    failure raises (after one re-measure for CPU-quota noise), which
+    fails this section and the CI step."""
+    from benchmarks.table1_scalability import run_gated
+    from repro.configs.difet_paper import PAPER_ALGORITHMS
+    rows = run_gated(n_scenes=3, scene=256 if quick else 512,
+                     workers=(1, 2) if quick else (1, 2, 4),
+                     batch_tiles=2 if quick else 4,
+                     algorithms=("harris", "fast", "sift") if quick
+                     else PAPER_ALGORITHMS)
     out = []
-    for alg, t, count in rows:
-        speedup = t[1] / t[4]
-        out.append((f"table1/{alg}", t[1] * 1e6, f"speedup4={speedup:.2f}"))
+    for r in rows:
+        for w in sorted(r["t"]):
+            out.append((
+                f"table1/{r['algorithm']}/w{w}", r["t"][w] * 1e6,
+                f"speedup={r['speedup'][w]:.2f};"
+                f"efficiency={r['efficiency'][w]:.2f};"
+                f"parity={r['parity']};count={r['total_count']}"))
     return out
 
 

@@ -1,0 +1,93 @@
+#!/usr/bin/env python
+"""Intra-repo link check over docs/ + the top-level markdown pages.
+
+Scans every ``[text](target)`` in the checked pages and fails (non-zero
+exit) when a *relative* target does not resolve to a file in the repo —
+broken cross-page links are how a docs tree rots.  ``#anchor`` fragments
+on markdown targets are verified against the target page's headings
+(GitHub slug rules: lowercase, spaces → dashes, punctuation dropped).
+External ``http(s)://`` links are not fetched (CI must not depend on the
+network); they are only counted.
+
+    python docs/check_links.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+PAGES = sorted(ROOT.glob("*.md")) + sorted((ROOT / "docs").glob("*.md"))
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug for a markdown heading."""
+    s = heading.strip().lower()
+    s = re.sub(r"[^\w\s§-]", "", s, flags=re.UNICODE)
+    return re.sub(r"\s+", "-", s)
+
+
+def prose_lines(path: Path) -> list:
+    """The page's lines with fenced code blocks removed — code samples
+    are neither links to check nor headings that define anchors."""
+    out = []
+    fenced = False
+    for line in path.read_text().splitlines():
+        if line.lstrip().startswith("```"):
+            fenced = not fenced
+            continue
+        if not fenced:
+            out.append(line)
+    return out
+
+
+def page_anchors(path: Path) -> set:
+    """The set of anchor slugs a markdown page exposes."""
+    anchors = set()
+    for line in prose_lines(path):
+        if line.startswith("#"):
+            anchors.add(slugify(line.lstrip("#")))
+    return anchors
+
+
+def check_page(path: Path) -> list:
+    """Return a list of broken-link descriptions for one page."""
+    errors = []
+    text = "\n".join(prose_lines(path))
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        base, _, anchor = target.partition("#")
+        dest = (path.parent / base).resolve() if base else path
+        if base and not dest.exists():
+            errors.append(f"{path.relative_to(ROOT)}: broken link "
+                          f"-> {target}")
+            continue
+        if anchor and dest.suffix == ".md" and dest.exists():
+            if anchor.lower() not in page_anchors(dest):
+                errors.append(f"{path.relative_to(ROOT)}: missing anchor "
+                              f"-> {target}")
+    return errors
+
+
+def main() -> int:
+    errors = []
+    n_links = 0
+    for page in PAGES:
+        n_links += len(LINK_RE.findall("\n".join(prose_lines(page))))
+        errors.extend(check_page(page))
+    if errors:
+        print(f"link check FAILED ({len(errors)} broken):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"link check OK: {len(PAGES)} pages, {n_links} links")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -30,9 +30,20 @@ from repro.distributed.sharding import shard_activation
 
 
 class AlgorithmSpec(NamedTuple):
-    response: Callable            # (img, cfg, use_pallas) -> response map
-    describe: Optional[Callable]  # (img, ys, xs) -> [K, D] or None
-    threshold: Callable           # cfg -> absolute response threshold
+    """One detector/descriptor algorithm as the engine consumes it.
+
+    Fields:
+        response:  ``(img [H,W], cfg, use_pallas) -> [H,W]`` dense
+            per-pixel response map (algorithms sharing a response
+            function share its computation, see `extract_tile_multi`).
+        describe:  ``(img [H,W], ys [K], xs [K]) -> [K, D]`` descriptor
+            extractor, or ``None`` for detector-only algorithms.
+        threshold: ``cfg -> float`` absolute response threshold applied
+            to the dense map before counting/top-K selection.
+    """
+    response: Callable
+    describe: Optional[Callable]
+    threshold: Callable
 
 
 def _harris_resp(img, cfg, use_pallas):

@@ -9,14 +9,27 @@
     new worker set — no global restart.
 
 ``ManifestJob`` is the generic machinery (manifest + atomic commit + resume
-loop); ``DifetJob`` is the extraction phase over bundles, and the stitching
-workload's pairwise-registration phase (`core/mosaic.py::MatchPhase`)
-reuses the same machinery for its match manifest.
+loop + per-worker leases); ``DifetJob`` is the extraction phase over
+bundles, and the stitching workload's pairwise-registration phase
+(`core/mosaic.py::MatchPhase`) reuses the same machinery for its match
+manifest.
+
+Multi-worker protocol (docs/scaling.md): the manifest's item order is
+fixed at creation and never rewritten — restart-determinism means any
+worker count walks the *same* ordered list.  Workers coordinate through
+``LeaseBoard``: an item is claimed by atomically creating a sidecar lease
+file; a crashed worker's lease expires after ``ttl_s`` and any live
+worker re-claims the item.  Because processing is deterministic and the
+result commit is atomic, a lease race at worst duplicates work — it never
+corrupts a result.  That is what makes the worker count *elastic*: kill
+workers, restart with more or fewer, and the job resumes cleanly.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
+import os
+import threading
 import time
 from pathlib import Path
 from typing import Callable, Dict, List, Optional, Sequence
@@ -29,22 +42,103 @@ from repro.core.engine import extract_features, extract_features_multi
 
 @dataclasses.dataclass
 class JobManifest:
-    algorithm: str                  # job name (extraction: algorithm string)
-    bundle_names: List[str]         # work-item names, in execution order
+    """The on-disk job state: ordered work items + their done bitmap.
+
+    ``bundle_names`` is fixed at creation and NEVER rewritten — the
+    restart-determinism contract: every restart, and every worker of an
+    elastic pool, walks the same ordered list (leases partition it).
+
+    Fields:
+        algorithm:         job name (extraction jobs: the algorithm string).
+        bundle_names:      work-item names in execution order.
+        done:              item name -> committed flag.
+        started_at:        epoch seconds at manifest creation.
+        shards_per_bundle: over-decomposition factor (straggler bound).
+    """
+    algorithm: str
+    bundle_names: List[str]
     done: Dict[str, bool]
     started_at: float
     shards_per_bundle: int = 4
 
     def to_json(self) -> str:
+        """Serialize for the atomic manifest commit."""
         return json.dumps(dataclasses.asdict(self), indent=1)
 
     @classmethod
     def from_json(cls, s: str) -> "JobManifest":
+        """Parse a manifest previously written by `to_json`."""
         return cls(**json.loads(s))
 
     @property
     def remaining(self) -> List[str]:
+        """Unprocessed item names, in manifest (execution) order."""
         return [b for b in self.bundle_names if not self.done.get(b)]
+
+
+class LeaseBoard:
+    """Per-item worker leases: filesystem claims for elastic worker pools.
+
+    ``acquire(item, worker)`` claims an item by creating
+    ``<item>.lease`` with ``O_CREAT | O_EXCL`` — the same cross-process
+    atomicity the manifest commit relies on.  A lease older than
+    ``ttl_s`` is considered orphaned (its worker died) and is stolen with
+    an atomic replace.  Re-acquiring one's own lease refreshes it.
+
+    The board is an *optimization*, not a correctness boundary: item
+    processing is deterministic and result commits are atomic, so the
+    worst outcome of a steal race is two workers redundantly computing
+    the same bit-identical result (MapReduce speculative execution).
+    """
+
+    def __init__(self, root, ttl_s: float = 600.0):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.ttl_s = ttl_s
+
+    def _path(self, item: str) -> Path:
+        return self.root / f"{item}.lease"
+
+    def _write(self, path: Path, worker: str) -> None:
+        # unique tmp per writer (two stealers racing must not consume each
+        # other's tmp file; the losing replace just overwrites benignly)
+        tmp = path.with_suffix(
+            f".tmp.{os.getpid()}.{threading.get_ident()}")
+        tmp.write_text(json.dumps({"worker": worker, "t": time.time()}))
+        tmp.replace(path)
+
+    def acquire(self, item: str, worker: str) -> bool:
+        """Try to claim ``item`` for ``worker``; True on success (including
+        refreshing a lease this worker already holds or stealing a stale
+        one)."""
+        path = self._path(item)
+        try:
+            fd = os.open(path, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+        except FileExistsError:
+            try:
+                lease = json.loads(path.read_text())
+            except (OSError, ValueError):
+                lease = None                    # mid-write/corrupt: steal
+            if lease is not None:
+                if lease.get("worker") == worker:
+                    self._write(path, worker)   # refresh our own lease
+                    return True
+                if time.time() - lease.get("t", 0.0) < self.ttl_s:
+                    return False                # live lease held elsewhere
+            self._write(path, worker)           # stale/orphaned: steal
+            return True
+        with os.fdopen(fd, "w") as f:
+            json.dump({"worker": worker, "t": time.time()}, f)
+        return True
+
+    def release(self, item: str, worker: str) -> None:
+        """Drop ``worker``'s lease on ``item`` (no-op if not held)."""
+        path = self._path(item)
+        try:
+            if json.loads(path.read_text()).get("worker") == worker:
+                path.unlink()
+        except (OSError, ValueError):
+            pass
 
 
 class ManifestJob:
@@ -55,16 +149,22 @@ class ManifestJob:
     manifest write-tmp-then-rename after each item — the MapReduce "task
     commit" analogue.  ``simulate_failure_after`` kills the job after N
     items (used by the fault-tolerance tests).
+
+    ``run(worker_id=...)`` joins an elastic worker pool: items are walked
+    in manifest order but claimed through the job's `LeaseBoard`, so any
+    number of concurrent workers (or restarts with a *different* worker
+    count) partition the remaining work without a coordinator.
     """
 
     def __init__(self, store: BundleStore, job_name: str,
                  items: Optional[Sequence[str]] = None, manifest_path=None,
-                 shards_per_bundle: int = 4):
+                 shards_per_bundle: int = 4, lease_ttl_s: float = 600.0):
         self.store = store
         self.job_name = job_name
         self.manifest_path = Path(manifest_path or
                                   store.root / f"{job_name}.manifest.json")
         self.shards_per_bundle = shards_per_bundle
+        self.lease_ttl_s = lease_ttl_s
         self._items = items
         self.manifest = self._load_or_create()
 
@@ -79,20 +179,80 @@ class ManifestJob:
         return m
 
     def _commit(self, manifest: JobManifest) -> None:
-        tmp = self.manifest_path.with_suffix(".tmp")
+        # tmp name is unique per writer: concurrent workers committing the
+        # same manifest must not consume each other's tmp file mid-replace
+        tmp = self.manifest_path.with_suffix(
+            f".tmp.{os.getpid()}.{threading.get_ident()}")
         tmp.write_text(manifest.to_json())
         tmp.replace(self.manifest_path)      # atomic manifest update
 
+    def _merge_done_from_disk(self) -> None:
+        """OR the on-disk manifest's done map into memory (tolerates a
+        concurrent writer; a failed read just keeps the local view)."""
+        try:
+            disk = JobManifest.from_json(self.manifest_path.read_text())
+            for n, d in disk.done.items():
+                if d:
+                    self.manifest.done[n] = True
+        except (OSError, ValueError, TypeError):
+            pass
+
+    def _commit_merged(self) -> None:
+        """Multi-worker commit: re-read the on-disk manifest and OR the
+        done maps before the atomic replace, so concurrent workers don't
+        erase each other's marks.  The residual read-replace race only
+        drops a *mark*, never a result (results live in the store and are
+        re-checked), so a re-run self-heals."""
+        self._merge_done_from_disk()
+        self._commit(self.manifest)
+
+    @property
+    def leases(self) -> LeaseBoard:
+        """The job's lease board (sidecar dir next to the manifest)."""
+        if not hasattr(self, "_leases"):
+            self._leases = LeaseBoard(
+                self.manifest_path.with_suffix(".leases"),
+                ttl_s=self.lease_ttl_s)
+        return self._leases
+
     def process(self, name: str) -> None:
+        """Produce + commit the result for one item (subclass hook)."""
         raise NotImplementedError
 
     def run(self, simulate_failure_after: Optional[int] = None,
-            progress: Optional[Callable[[str], None]] = None) -> Dict:
+            progress: Optional[Callable[[str], None]] = None,
+            worker_id: Optional[str] = None) -> Dict:
+        """Process remaining items in manifest order; returns `summary()`.
+
+        Args:
+            simulate_failure_after: raise after N items (fault-tolerance
+                tests — the restart path is the recovery protocol).
+            progress: optional per-item callback with the item name.
+            worker_id: join the elastic worker pool under this identity —
+                items are claimed via the lease board, skipped when
+                another live worker holds them, and released on commit.
+                ``None`` (single-worker mode) bypasses leasing entirely.
+        """
         processed = 0
         for name in list(self.manifest.remaining):
+            if worker_id is not None:
+                if self.manifest.done.get(name):
+                    continue
+                # a peer may have finished this item after our snapshot:
+                # one cheap manifest re-read avoids re-extracting a whole
+                # bundle (work, not correctness — results are idempotent)
+                self._merge_done_from_disk()
+                if self.manifest.done.get(name):
+                    continue
+                if not self.leases.acquire(name, worker_id):
+                    continue                    # leased by a live worker
             self.process(name)
             self.manifest.done[name] = True
-            self._commit(self.manifest)
+            if worker_id is not None:
+                self._commit_merged()
+                self.leases.release(name, worker_id)
+            else:
+                self._commit(self.manifest)
             processed += 1
             if progress:
                 progress(name)
@@ -102,6 +262,7 @@ class ManifestJob:
         return self.summary()
 
     def summary(self) -> Dict:
+        """Progress report: ``{job, bundles_done, bundles_total}``."""
         done = [n for n, d in self.manifest.done.items() if d]
         return {"job": self.job_name, "bundles_done": len(done),
                 "bundles_total": len(self.manifest.bundle_names)}
@@ -122,11 +283,22 @@ class DifetJob(ManifestJob):
     ``extract_features_multi`` so algorithms sharing a response function
     compute it once per tile; results are stored per algorithm
     (``<bundle>.<alg>``), identical to single-algorithm runs.
+
+    With ``mesh`` set, every shard's tile batch is device-sharded over the
+    mesh's data axes (`sharding.batch_pspec`): the batch is pad-flagged up
+    to a device-count multiple, extracted under a jit with explicit input
+    shardings (one compiled program per batch shape), and the result is
+    sliced back — bit-identical to the same jitted program without input
+    shardings, since pad tiles are masked before the reduce and
+    `lax.top_k` tie-breaks by index (sharding is a layout change, never a
+    numerics change; the eager no-mesh path may differ in float ulps from
+    any jitted path because XLA fuses differently).
     """
 
     def __init__(self, store: BundleStore, algorithm: str,
                  manifest_path=None, shards_per_bundle: int = 4,
-                 extractor: Optional[Callable] = None):
+                 extractor: Optional[Callable] = None, mesh=None,
+                 use_pallas: bool = False, lease_ttl_s: float = 600.0):
         # a custom extractor's output is opaque — store it under the full
         # job name rather than splitting into per-algorithm results
         if extractor is not None:
@@ -137,8 +309,12 @@ class DifetJob(ManifestJob):
             algorithm = ",".join(self.algorithms)   # normalized whitespace
         self.algorithm = algorithm
         self.extractor = extractor
+        self.mesh = mesh
+        self.use_pallas = use_pallas
+        self._sharded_fns: Dict[tuple, Callable] = {}
         super().__init__(store, algorithm, manifest_path=manifest_path,
-                         shards_per_bundle=shards_per_bundle)
+                         shards_per_bundle=shards_per_bundle,
+                         lease_ttl_s=lease_ttl_s)
 
     def _shards(self, bundle: TileBundle) -> List[TileBundle]:
         """Over-decomposition for straggler mitigation: split tiles into
@@ -148,16 +324,71 @@ class DifetJob(ManifestJob):
         return [TileBundle(bundle.tiles[s], bundle.headers[s], bundle.cfg)
                 for s in splits if len(s)]
 
+    # ---- mesh-sharded extraction -------------------------------------------
+    def _data_size(self) -> int:
+        from repro.distributed.sharding import dp_axes
+        return int(np.prod([self.mesh.shape[a]
+                            for a in dp_axes(self.mesh)] or [1]))
+
+    def _sharded_fn(self, tiles_shape, cfg) -> Callable:
+        """One jitted, input-sharded program per (algorithms, batch shape,
+        config); cached so a streaming pipeline's fixed-shape batches
+        compile exactly once."""
+        import functools
+        import jax
+        from jax.sharding import NamedSharding
+        from repro.distributed.sharding import batch_pspec
+        key = (self.algorithms, tuple(tiles_shape), cfg)
+        if key not in self._sharded_fns:
+            shardings = (NamedSharding(self.mesh, batch_pspec(self.mesh, 3)),
+                         NamedSharding(self.mesh, batch_pspec(self.mesh, 2)))
+            self._sharded_fns[key] = jax.jit(
+                functools.partial(extract_features_multi,
+                                  algorithms=self.algorithms, cfg=cfg,
+                                  use_pallas=self.use_pallas),
+                in_shardings=shardings)
+        return self._sharded_fns[key]
+
+    @staticmethod
+    def _slice_result(res: Dict, n: int, k: int) -> Dict:
+        """Undo device-count padding: drop pad rows from per-tile arrays
+        and re-truncate the top-K merge to the unpadded candidate count.
+        Pad tiles are all-invalid (-inf before top_k, which tie-breaks by
+        index), so the kept prefix is bit-identical to the unpadded run."""
+        out = dict(res)
+        out["per_tile_count"] = res["per_tile_count"][:n]
+        kk = min(k * 4, n * k)
+        for key in ("top_scores", "top_ys", "top_xs", "top_valid",
+                    "top_desc"):
+            if key in res:
+                out[key] = res[key][:kk]
+        return out
+
     def _extract(self, tiles, headers, cfg) -> Dict[str, Dict]:
         if self.extractor is not None:
             return {self.algorithm: self.extractor(tiles, headers)}
+        if self.mesh is not None:
+            import jax
+            n = tiles.shape[0]
+            pad = (-n) % self._data_size()
+            b = TileBundle(np.asarray(tiles), np.asarray(headers),
+                           cfg).pad_to(n + pad)
+            out = self._sharded_fn(b.tiles.shape, cfg)(b.tiles, b.headers)
+            out = jax.device_get(out)
+            return {alg: self._slice_result(r, n,
+                                            cfg.max_keypoints_per_tile)
+                    for alg, r in out.items()}
         if len(self.algorithms) > 1:
             return extract_features_multi(tiles, headers, self.algorithms,
-                                          cfg)
+                                          cfg, use_pallas=self.use_pallas)
         return {self.algorithm:
-                extract_features(tiles, headers, self.algorithm, cfg)}
+                extract_features(tiles, headers, self.algorithm, cfg,
+                                 use_pallas=self.use_pallas)}
 
     def process(self, name: str) -> None:
+        """Extract one bundle: split into shards, extract each (device-
+        sharded when a mesh is set), merge shard partials, and commit one
+        ``<name>.<algorithm>`` result per algorithm to the store."""
         bundle = self.store.get(name)
         partials: Dict[str, List[Dict]] = {}
         for shard in self._shards(bundle):
@@ -190,6 +421,9 @@ class DifetJob(ManifestJob):
                 for n in done}
 
     def summary(self) -> Dict:
+        """Progress + feature counts: per-bundle ``counts`` and the
+        ``grand_total`` for single-algorithm jobs; the same nested under
+        ``per_algorithm`` for multi-algorithm jobs."""
         done = [n for n, d in self.manifest.done.items() if d]
         base = {"algorithm": self.algorithm, "bundles_done": len(done),
                 "bundles_total": len(self.manifest.bundle_names)}

@@ -1,0 +1,374 @@
+"""Streaming tile pipeline: scene stripes → halo tiles → staged batches.
+
+The eager path (`core/bundle.py::tile_scene`) pads a whole scene in host
+memory and cuts every tile at once — fine for test scenes, impossible for
+the paper's ~230 MB LandSat-8 inputs times N. This module is the streaming
+replacement, and the ingest layer of the horizontal-scalability subsystem
+(docs/ingest.md):
+
+    SceneReader.stripes()  →  StreamTiler  →  batch packer  →  Prefetcher
+    (row stripes, mmap)       (halo tiles,     (fixed-shape     (host thread,
+                               row window)      TileBundles)     double buffer)
+
+* `StreamTiler` keeps only the row window a tile row needs (reflect
+  padding included), so resident host memory is O(tile + 2·halo) rows per
+  scene regardless of scene height.  Its tiles are **bit-identical** to
+  `tile_scene` output in the same order (`tests/test_pipeline.py`).
+* `iter_tile_batches` packs tiles from a scene sequence into fixed-shape
+  `TileBundle` batches (the last batch pad-flagged to shape), so every
+  batch hits one compiled program — and a batch is the unit the manifest
+  orders and workers lease (`core/job.py`).
+* `Prefetcher` runs the iterator on a host thread with a bounded queue
+  (depth 2 = double buffering) and optionally stages arrays onto devices
+  with `jax.device_put`, so host tiling/IO overlaps device compute.
+  Errors propagate to the consumer; `close()` always reclaims the thread.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterable, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.difet_paper import DifetConfig
+from repro.core.bundle import TileBundle
+from repro.data.landsat import SceneReader
+
+__all__ = ["StreamTiler", "iter_scene_tiles", "iter_tile_batches",
+           "Prefetcher", "reflect_indices"]
+
+
+def reflect_indices(n: int, pad_before: int, pad_after: int) -> np.ndarray:
+    """Source indices for ``np.pad(mode="reflect")`` along one axis.
+
+    Returns int64 ``[pad_before + n + pad_after]`` mapping each padded
+    position to its source index in ``[0, n)`` — the index form of numpy's
+    even-reflect (no edge repeat), including multi-bounce for pads wider
+    than the axis.  Lets the tiler compute any padded row from raw scene
+    rows without materializing a padded scene.
+    """
+    if n == 1:
+        return np.zeros(pad_before + 1 + pad_after, np.int64)
+    j = np.arange(-pad_before, n + pad_after)
+    period = 2 * (n - 1)
+    j = np.abs(j) % period
+    return np.where(j >= n, period - j, j)
+
+
+class StreamTiler:
+    """Incremental `tile_scene`: feed row stripes, collect finished tiles.
+
+    Tiles come out in the same row-major ``(ty, tx)`` order, with the same
+    float32 values and int32 headers, as ``tile_scene(gray, cfg,
+    scene_id)`` on the fully materialized scene — the parity is bitwise
+    and tested.  Internally each arriving row is reflect-padded
+    horizontally once; a tile row is emitted as soon as the last raw row
+    it references (bottom reflection included) has arrived, and raw rows
+    no longer referenced by any future tile row are dropped.
+
+    Args:
+        h, w:      scene extent in pixels (known up front from the reader).
+        cfg:       tiling geometry (``cfg.tile`` interior, ``cfg.halo``
+                   overlap ring).
+        scene_id:  stamped into every emitted header.
+
+    Use ``feed(stripe)`` per stripe and ``finish()`` once after the last
+    stripe; both return ``(tiles, headers)`` lists for the tile rows that
+    completed.
+    """
+
+    def __init__(self, h: int, w: int, cfg: DifetConfig, scene_id: int = 0):
+        if h <= 0 or w <= 0:
+            raise ValueError(f"empty scene: {h}x{w}")
+        t, halo = cfg.tile, cfg.halo
+        self.cfg = cfg
+        self.scene_id = scene_id
+        self.h, self.w = h, w
+        self.ny = (h + t - 1) // t
+        self.nx = (w + t - 1) // t
+        # row index maps of the padded scene (height ny*t + 2*halo):
+        # padded row -> source scene row, exactly np.pad(reflect) semantics
+        self._row_src = reflect_indices(h, halo, halo + self.ny * t - h)
+        self._col_pad = (halo, halo + self.nx * t - w)
+        # per tile row: the last raw row it references decides readiness
+        self._last_needed = [
+            int(self._row_src[ty * t: ty * t + t + 2 * halo].max())
+            for ty in range(self.ny)]
+        # raw row -> number of tile rows still referencing it (for eviction)
+        self._refcount = np.zeros(h, np.int64)
+        for ty in range(self.ny):
+            for r in np.unique(self._row_src[ty * t:
+                                             ty * t + t + 2 * halo]):
+                self._refcount[r] += 1
+        self._rows = {}          # raw row index -> horizontally padded row
+        self._next_row = 0       # next raw row index expected from feed()
+        self._next_ty = 0        # next tile row to emit
+
+    def feed(self, stripe: np.ndarray) -> Tuple[List[np.ndarray],
+                                                List[Tuple]]:
+        """Consume one ``[rows, w]`` stripe; return tiles that completed.
+
+        Stripes must arrive in order and cover the scene exactly; a stripe
+        wider/narrower than ``w`` raises (the truncated-scene guard).
+        """
+        stripe = np.asarray(stripe, np.float32)
+        if stripe.ndim != 2 or stripe.shape[1] != self.w:
+            raise ValueError(f"stripe shape {stripe.shape} does not match "
+                             f"scene width {self.w}")
+        if self._next_row + stripe.shape[0] > self.h:
+            raise ValueError(
+                f"stripe overruns scene: rows "
+                f"[{self._next_row}, {self._next_row + stripe.shape[0]}) "
+                f"beyond h={self.h}")
+        for i in range(stripe.shape[0]):
+            r = self._next_row + i
+            if self._refcount[r]:
+                self._rows[r] = np.pad(stripe[i], self._col_pad,
+                                       mode="reflect")
+        self._next_row += stripe.shape[0]
+        return self._drain()
+
+    def finish(self) -> Tuple[List[np.ndarray], List[Tuple]]:
+        """Assert full coverage and return any remaining tile rows."""
+        if self._next_row != self.h:
+            raise ValueError(f"scene truncated: got {self._next_row} of "
+                             f"{self.h} rows")
+        tiles, headers = self._drain()
+        if self._next_ty != self.ny:
+            raise AssertionError("tiler finished with pending tile rows")
+        return tiles, headers
+
+    def _drain(self):
+        t, halo = self.cfg.tile, self.cfg.halo
+        tiles, headers = [], []
+        while (self._next_ty < self.ny
+               and self._last_needed[self._next_ty] < self._next_row):
+            ty = self._next_ty
+            src = self._row_src[ty * t: ty * t + t + 2 * halo]
+            slab = np.stack([self._rows[int(r)] for r in src])
+            for tx in range(self.nx):
+                x0 = tx * t
+                tiles.append(slab[:, x0:x0 + t + 2 * halo])
+                headers.append((self.scene_id, ty, tx,
+                                min(t, self.h - ty * t),
+                                min(t, self.w - tx * t), 0))
+            for r in np.unique(src):
+                self._refcount[r] -= 1
+                if self._refcount[r] == 0:
+                    del self._rows[int(r)]
+            self._next_ty += 1
+        return tiles, headers
+
+
+def iter_scene_tiles(reader: SceneReader, cfg: DifetConfig,
+                     scene_id: int = 0,
+                     stripe_rows: Optional[int] = None):
+    """Stream one scene's halo tiles: yields ``(tile, header)`` pairs in
+    `tile_scene` order without materializing the scene.  ``stripe_rows``
+    defaults to one tile row's worth of raw rows."""
+    h, w = reader.shape
+    stripe_rows = stripe_rows or (cfg.tile + 2 * cfg.halo)
+    tiler = StreamTiler(h, w, cfg, scene_id)
+    for stripe in reader.stripes(stripe_rows):
+        for pair in zip(*tiler.feed(stripe)):
+            yield pair
+    for pair in zip(*tiler.finish()):
+        yield pair
+
+
+def scene_tile_count(shape: Tuple[int, int], cfg: DifetConfig) -> int:
+    """Tiles `tile_scene` cuts from a scene of this shape (header math
+    only — no pixels read)."""
+    h, w = shape
+    return (((h + cfg.tile - 1) // cfg.tile)
+            * ((w + cfg.tile - 1) // cfg.tile))
+
+
+def count_batches(shapes: Sequence[Tuple[int, int]], cfg: DifetConfig,
+                  batch_tiles: int) -> int:
+    """Batches `iter_tile_batches` will yield for scenes of these shapes —
+    lets a manifest be written before any pixel is read."""
+    total = sum(scene_tile_count(s, cfg) for s in shapes)
+    return (total + batch_tiles - 1) // batch_tiles
+
+
+def iter_tile_batches(readers: Sequence[SceneReader], cfg: DifetConfig,
+                      batch_tiles: int,
+                      stripe_rows: Optional[int] = None,
+                      start: int = 0, stop: Optional[int] = None
+                      ) -> Iterator[Tuple[int, TileBundle]]:
+    """Pack a scene sequence into fixed-shape `TileBundle` batches.
+
+    Tiles stream scene by scene (scene_id = position in ``readers``) in
+    `bundle_scenes` order; batch *i* holds flat tiles
+    ``[i·batch_tiles, (i+1)·batch_tiles)`` of that order, the final
+    partial batch padded to shape with pad-flagged empty tiles
+    (`TileBundle.pad_to`), which the engine masks out.  Fixed shapes mean
+    one compiled program serves every batch, and the batch index is the
+    manifest work item a worker leases (`core/job.py`).
+
+    ``start``/``stop`` select the contiguous batch slice ``[start, stop)``
+    — a worker's share of the manifest.  Scenes contributing no tile to
+    the slice are skipped without reading a pixel (their tile counts come
+    from header math), so N workers re-read only boundary scenes, not the
+    whole set.  Yields ``(batch_index, bundle)`` pairs.
+    """
+    if batch_tiles <= 0:
+        raise ValueError(f"batch_tiles must be positive, got {batch_tiles}")
+    n_batches = count_batches([r.shape for r in readers], cfg, batch_tiles)
+    stop = n_batches if stop is None else min(stop, n_batches)
+    if start < 0 or start > stop:
+        raise ValueError(f"bad batch slice [{start}, {stop})")
+    tiles: List[np.ndarray] = []
+    headers: List[Tuple] = []
+    flat = 0                       # global flat tile index
+    for sid, reader in enumerate(readers):
+        n_s = scene_tile_count(reader.shape, cfg)
+        first_b = flat // batch_tiles
+        last_b = (flat + n_s - 1) // batch_tiles
+        if last_b < start or first_b >= stop:
+            flat += n_s            # scene wholly outside the slice: no IO
+            continue
+        for tile, header in iter_scene_tiles(reader, cfg, sid, stripe_rows):
+            if start <= flat // batch_tiles < stop:
+                tiles.append(tile)
+                headers.append(header)
+                if len(tiles) == batch_tiles:
+                    yield (flat // batch_tiles,
+                           TileBundle(np.stack(tiles),
+                                      np.asarray(headers, np.int32), cfg))
+                    tiles, headers = [], []
+            flat += 1
+            if stop < n_batches and flat >= stop * batch_tiles:
+                # slice exhausted mid-scene: every batch before `stop` is
+                # full and already yielded — stop reading stripes now
+                return
+    if tiles:                      # the globally-last batch, pad-flagged
+        yield (flat // batch_tiles,
+               TileBundle(np.stack(tiles), np.asarray(headers, np.int32),
+                          cfg).pad_to(batch_tiles))
+
+
+def batch_slices(n_batches: int, n_workers: int) -> List[Tuple[int, int]]:
+    """Contiguous near-even ``[lo, hi)`` batch slices, one per worker —
+    the restart-deterministic work partition (same inputs → same slices,
+    any worker count covers every batch exactly once)."""
+    bounds = np.linspace(0, n_batches, n_workers + 1).astype(int)
+    return [(int(bounds[i]), int(bounds[i + 1])) for i in range(n_workers)]
+
+
+class Prefetcher:
+    """Host-side prefetch queue with optional device staging.
+
+    Wraps any iterator in a daemon thread + bounded queue.  With
+    ``depth=2`` (the default) this is classic double buffering: while the
+    consumer computes on batch *i*, the thread is already tiling/reading
+    batch *i+1* — and, when ``device_put=True``, has issued its
+    host→device transfer, so the copy overlaps compute too.
+
+    Error contract: an exception in the producer (e.g. a truncated scene
+    mid-stream) is captured, the thread exits, and the exception re-raises
+    in the consumer at the point of the failed batch.  ``close()`` (or
+    ``with``) shuts the thread down promptly even if the consumer abandons
+    iteration early — the producer never blocks forever on a full queue.
+
+    Staging: with ``device_put=True`` each yielded item is placed on
+    device in the producer thread.  ``TileBundle``s (bare or inside a
+    yielded tuple, as `iter_tile_batches` produces) stage tiles and
+    headers separately — ``sharding`` may be a single device/sharding
+    applied to both, or a ``(tiles_sharding, headers_sharding)`` pair
+    (tiles are rank 3, headers rank 2, so NamedShardings need the pair
+    form, e.g. ``batch_pspec(mesh, 3)`` / ``batch_pspec(mesh, 2)``).
+    Plain arrays use the tiles sharding; non-array items (batch indices)
+    pass through untouched.
+    """
+
+    _DONE = object()
+
+    def __init__(self, it: Iterable, depth: int = 2,
+                 device_put: bool = False, sharding=None):
+        if depth <= 0:
+            raise ValueError(f"depth must be positive, got {depth}")
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._error: Optional[BaseException] = None
+        self._device_put = device_put
+        self._shardings = (tuple(sharding) if isinstance(sharding, tuple)
+                           else (sharding, sharding))
+        self._thread = threading.Thread(
+            target=self._produce, args=(iter(it),), daemon=True,
+            name="difet-prefetch")
+        self._thread.start()
+
+    def _stage_one(self, x):
+        import jax
+        tiles_sh, headers_sh = self._shardings
+        if isinstance(x, TileBundle):
+            return TileBundle(jax.device_put(x.tiles, tiles_sh),
+                              jax.device_put(x.headers, headers_sh),
+                              x.cfg)
+        if isinstance(x, np.ndarray):
+            return jax.device_put(x, tiles_sh)
+        return x
+
+    def _stage(self, item):
+        if not self._device_put:
+            return item
+        if isinstance(item, tuple):
+            return tuple(self._stage_one(x) for x in item)
+        return self._stage_one(item)
+
+    def _put(self, item) -> bool:
+        while not self._stop.is_set():
+            try:
+                self._q.put(item, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def _produce(self, it):
+        try:
+            for item in it:
+                if not self._put(self._stage(item)):
+                    return                      # consumer closed early
+        except BaseException as e:  # noqa: BLE001 — propagated to consumer
+            self._error = e
+        self._put(self._DONE)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        while True:
+            try:
+                item = self._q.get(timeout=0.05)
+            except queue.Empty:
+                if not self._thread.is_alive() and self._q.empty():
+                    # producer died without a sentinel (shouldn't happen)
+                    raise StopIteration
+                continue
+            if item is self._DONE:
+                if self._error is not None:
+                    err, self._error = self._error, None
+                    raise err
+                raise StopIteration
+            return item
+
+    def close(self):
+        """Stop the producer thread and drop queued batches."""
+        self._stop.set()
+        while True:
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+        self._thread.join(timeout=5.0)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

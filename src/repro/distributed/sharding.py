@@ -42,6 +42,7 @@ def use_mesh(mesh: Mesh):
 
 
 def current_mesh() -> Optional[Mesh]:
+    """The ambient mesh set by `use_mesh`, or None outside any context."""
     m = getattr(_state, "mesh", None)
     if m is not None:
         return m
@@ -155,6 +156,10 @@ def _path_str(path) -> str:
 
 
 def pspec_for(path_str: str, shape, mesh: Mesh) -> P:
+    """PartitionSpec for one param: first `PARAM_RULES` suffix match wins,
+    2D+ params fall back to (fsdp, tensor) on the trailing dims, scalars
+    and norm scales replicate.  Sharded dims always divide the mesh axes
+    (`resolve_spec` drops any axis that doesn't)."""
     for pat, logical in PARAM_RULES:
         if re.search(pat, path_str):
             return resolve_spec(logical, shape, mesh)
@@ -172,6 +177,8 @@ def param_pspec_tree(params_shapes, mesh: Mesh):
 
 
 def make_param_shardings(params_shapes, mesh: Mesh):
+    """`param_pspec_tree` with every spec wrapped in a NamedSharding —
+    the form ``jax.jit(in_shardings=...)`` and device_put consume."""
     specs = param_pspec_tree(params_shapes, mesh)
     return jtu.tree_map(lambda s: NamedSharding(mesh, s), specs,
                         is_leaf=lambda x: isinstance(x, P))
@@ -235,6 +242,24 @@ def shard_activation(x, kind: str):
 
 
 def batch_pspec(mesh: Mesh, rank: int = 2) -> P:
+    """PartitionSpec sharding only the leading (batch) dim over the data
+    axes: ``P(data, None, ...)`` padded to ``rank``.  This is the one spec
+    the DIFET tile path needs — tiles ``[N, H, W]`` and headers ``[N, 6]``
+    both split over ``N``, everything per-tile stays local (the paper's
+    "good locality": the map needs no cross-tile communication)."""
     dp = dp_axes(mesh)
     dp = dp[0] if len(dp) == 1 else dp
     return P(dp, *([None] * (rank - 1)))
+
+
+def data_mesh(n_devices: Optional[int] = None) -> Mesh:
+    """A 1-D ``("data",)`` mesh over the first ``n_devices`` local devices
+    (all of them by default) — the mesh shape of the DIFET extraction
+    workload, where the only parallel axis is the tile batch.  On a
+    single-device host this degrades to a size-1 mesh, under which every
+    sharding constraint is a no-op but the same code paths compile."""
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else n_devices
+    if not 1 <= n <= len(devs):
+        raise ValueError(f"n_devices={n} outside [1, {len(devs)}]")
+    return Mesh(np.asarray(devs[:n]), ("data",))

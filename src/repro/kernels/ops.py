@@ -116,6 +116,8 @@ def scalespace_vmem_bytes(h: int, w: int, scales_per_octave: int,
 
 def scalespace_fits_vmem(h: int, w: int, scales_per_octave: int,
                          sigma0: float = 1.6) -> bool:
+    """True when a fused octave for an ``[h, w]`` tile fits the 12 MiB
+    VMEM budget — the dispatcher's kernel/jnp-fallback gate."""
     return scalespace_vmem_bytes(h, w, scales_per_octave,
                                  sigma0) <= VMEM_BUDGET_BYTES
 
@@ -139,6 +141,8 @@ def matcher_vmem_bytes(nk: int, d: int, metric: str = "l2") -> int:
 
 
 def matcher_fits_vmem(nk: int, d: int, metric: str = "l2") -> bool:
+    """True when an ``[nk, d]`` descriptor database fits the matcher
+    kernel's VMEM budget — the `match_best2` kernel/fallback gate."""
     return matcher_vmem_bytes(nk, d, metric) <= VMEM_BUDGET_BYTES
 
 

@@ -17,10 +17,30 @@ from repro.core.job import DifetJob
 from repro.data.landsat import synthetic_scene
 
 
-def build_store(store_path, n_scenes, scene_hw, cfg, scenes_per_bundle=1):
+def build_store(store_path, n_scenes, scene_hw, cfg, scenes_per_bundle=1,
+                stream: bool = False, batch_tiles: int = 64):
+    """Populate (or reopen) a BundleStore with synthetic scenes.
+
+    ``stream=False`` materializes each scene in memory
+    (`bundle_scenes`); ``stream=True`` writes the scene set band-striped
+    to disk and cuts fixed-shape bundles through the streaming ingest
+    pipeline (`data/pipeline.py`) — one bundle per ``batch_tiles`` tile
+    batch, host memory bounded by the tiler's row window.
+    """
     store = BundleStore(store_path)
     existing = store.list()
     if existing:
+        return store
+    if stream:
+        from pathlib import Path
+        from repro.data.landsat import BandSceneReader, \
+            write_synthetic_scene_set
+        from repro.data.pipeline import iter_tile_batches
+        dirs = write_synthetic_scene_set(Path(store_path) / "scenes",
+                                         n_scenes, *scene_hw)
+        readers = [BandSceneReader(d) for d in dirs]
+        for idx, bundle in iter_tile_batches(readers, cfg, batch_tiles):
+            store.put(f"bundle_{idx:04d}", bundle)
         return store
     for i in range(0, n_scenes, scenes_per_bundle):
         scenes = [synthetic_scene(*scene_hw, seed=i + j)
@@ -42,6 +62,10 @@ def main(argv=None):
     ap.add_argument("--scene-size", type=int, default=768)
     ap.add_argument("--tile", type=int, default=256)
     ap.add_argument("--store", default="/tmp/difet_store")
+    ap.add_argument("--stream", action="store_true",
+                    help="build bundles through the streaming ingest "
+                         "pipeline (band-striped scenes on disk, bounded "
+                         "host memory) instead of in-memory scenes")
     ap.add_argument("--use-pallas", action="store_true")
     ap.add_argument("--fail-after", type=int, default=None,
                     help="simulate worker failure after N bundles")
@@ -56,8 +80,9 @@ def main(argv=None):
         ap.error(str(e))
     cfg = DifetConfig(tile=args.tile, halo=24, max_keypoints_per_tile=256)
     store = build_store(args.store, args.scenes,
-                        (args.scene_size, args.scene_size), cfg)
-    job = DifetJob(store, algorithm)
+                        (args.scene_size, args.scene_size), cfg,
+                        stream=args.stream)
+    job = DifetJob(store, algorithm, use_pallas=args.use_pallas)
     print(f"[difet] {algorithm} over {len(store.list())} bundles "
           f"({args.scenes} scenes of {args.scene_size}^2, tile={args.tile})")
     t0 = time.time()

@@ -11,9 +11,10 @@ the serving subsystem:
       → normalize algorithms (`core/engine.py::normalize_algorithms`)
       → grayscale + bucket-pad (`serve/buckets.py`), or split oversize
         scenes into bucket tiles
-      → per-(tile digest, algorithm, config digest) result-cache probe
-        (`serve/cache.py`); fully-cached requests return without touching
-        the device
+      → per-(tile digest + grid position, algorithm, config digest)
+        result-cache probe (`serve/cache.py`; position is in the key
+        because results carry scene-global coordinates); fully-cached
+        requests return without touching the device
       → misses coalesce with identical in-flight work, else enqueue on
         the continuous-batching scheduler (`serve/scheduler.py`)
       → the runner pads the batch into the bucket's fixed device shape
@@ -65,6 +66,7 @@ def encode_tile(arr: np.ndarray) -> bytes:
 
 
 def decode_tile(data: bytes) -> np.ndarray:
+    """Inverse of `encode_tile`: ``.npy`` bytes back to the tile array."""
     return np.load(io.BytesIO(data), allow_pickle=False)
 
 
@@ -121,6 +123,8 @@ class ExtractResponse:
 
     @property
     def fully_cached(self) -> bool:
+        """True iff every (tile, algorithm) of this request was served
+        from the result cache — the device was never touched."""
         return all(v >= 1.0 for v in self.cached.values())
 
 
@@ -149,6 +153,8 @@ class ResponseHandle:
         self._enqueued_at = enqueued_at
 
     def done(self) -> bool:
+        """Non-blocking readiness probe: True once every tile of the
+        request has a result (``result()`` will not block)."""
         return all(p.future is None or p.future.done() for p in self._parts)
 
     def result(self, timeout: Optional[float] = None) -> ExtractResponse:
@@ -280,7 +286,14 @@ class FeatureService:
             fut = self.scheduler.submit(tile, header, bucket, algs,
                                         block=block)
             return _TilePart({}, algs, fut)
-        digest = tile_digest(tile)
+        # the key must fold the header's grid position + valid extent:
+        # results carry scene-GLOBAL coordinates (ys = ty*tile + ...), so
+        # two pixel-identical tiles at different (ty, tx) — e.g. a
+        # recurring granule in an oversize scene split — have different
+        # correct outputs and must never alias (scene_id itself doesn't
+        # enter the compute, so it stays out of the key)
+        digest = (tile_digest(tile)
+                  + ":" + ",".join(str(int(v)) for v in header[1:]))
         cached = {}
         for alg in algs:
             hit = self.cache.get((digest, alg, cfg_dig))
@@ -362,10 +375,15 @@ class FeatureService:
         return warmup(self.compile_cache, sets, buckets)
 
     def stats(self) -> Dict[str, object]:
+        """Operational counters: result-cache hits/misses/evictions,
+        scheduler queue depths and batch sizes, and the compiled
+        (bucket, algorithm-set) program inventory."""
         return {"cache": self.cache.stats(),
                 "scheduler": self.scheduler.stats(),
                 "programs": self.compile_cache.programs,
                 "program_keys": self.compile_cache.keys()}
 
     def close(self, timeout: Optional[float] = 30.0) -> None:
+        """Drain and stop the scheduler runner thread (idempotent);
+        pending futures resolve before shutdown or time out."""
         self.scheduler.stop(timeout)

@@ -1,0 +1,312 @@
+"""Streaming ingest: tiler bit-parity, ragged/odd scenes, band stripes,
+prefetcher error/shutdown, and sliced-batch coverage."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs.difet_paper import DifetConfig
+from repro.core.bundle import bundle_scenes, rgba_to_gray, tile_scene
+from repro.data.landsat import (ArraySceneReader, BandSceneReader,
+                                synthetic_scene, synthetic_scene_rgba,
+                                write_scene_bands)
+from repro.data.pipeline import (Prefetcher, StreamTiler, batch_slices,
+                                 count_batches, iter_scene_tiles,
+                                 iter_tile_batches, reflect_indices)
+
+CFG = DifetConfig(tile=64, halo=16, max_keypoints_per_tile=32)
+
+
+def stream_all(reader, cfg=CFG, scene_id=0, stripe_rows=None):
+    pairs = list(iter_scene_tiles(reader, cfg, scene_id, stripe_rows))
+    tiles = np.stack([t for t, _ in pairs])
+    headers = np.asarray([h for _, h in pairs], np.int32)
+    return tiles, headers
+
+
+def test_reflect_indices_match_np_pad():
+    rng = np.random.RandomState(0)
+    for n, before, after in [(7, 3, 5), (64, 16, 16), (5, 0, 7),
+                             (1, 2, 2), (3, 4, 4), (100, 16, 44)]:
+        x = rng.rand(n).astype(np.float32)
+        idx = reflect_indices(n, before, after)
+        np.testing.assert_array_equal(
+            x[idx], np.pad(x, (before, after), mode="reflect"))
+
+
+@pytest.mark.parametrize("hw", [(128, 128), (100, 120), (97, 131),
+                                (64, 200), (30, 30), (65, 63)])
+def test_stream_tiler_bit_identical_to_tile_scene(hw):
+    """Odd, truncated-to-odd, and sub-tile scene sizes all round-trip
+    bit-exactly through the streaming tiler."""
+    gray = synthetic_scene(*hw, seed=3)
+    eager = tile_scene(gray, CFG, scene_id=5)
+    tiles, headers = stream_all(ArraySceneReader(gray), scene_id=5)
+    np.testing.assert_array_equal(tiles, eager.tiles)
+    np.testing.assert_array_equal(headers, eager.headers)
+
+
+def test_stream_tiler_stripe_size_invariance():
+    gray = synthetic_scene(130, 94, seed=1)
+    ref = stream_all(ArraySceneReader(gray))
+    for rows in (1, 7, 32, 500):
+        got = stream_all(ArraySceneReader(gray), stripe_rows=rows)
+        np.testing.assert_array_equal(got[0], ref[0])
+        np.testing.assert_array_equal(got[1], ref[1])
+
+
+def test_stream_tiler_rejects_truncated_and_overrun_scenes():
+    tiler = StreamTiler(100, 80, CFG)
+    tiler.feed(np.zeros((60, 80), np.float32))
+    with pytest.raises(ValueError, match="truncated"):
+        tiler.finish()                          # 40 rows never arrived
+    with pytest.raises(ValueError, match="overruns"):
+        tiler.feed(np.zeros((50, 80), np.float32))
+    with pytest.raises(ValueError, match="width"):
+        tiler.feed(np.zeros((10, 79), np.float32))
+
+
+def test_band_reader_matches_eager_gray(tmp_path):
+    rgba = synthetic_scene_rgba(90, 110, seed=2)
+    d = write_scene_bands(tmp_path, "s0", rgba)
+    reader = BandSceneReader(d)
+    assert reader.shape == (90, 110)
+    np.testing.assert_array_equal(reader.read_rows(0, 90),
+                                  rgba_to_gray(rgba))
+    # stripe reads agree with whole-scene reads
+    np.testing.assert_array_equal(
+        np.concatenate(list(reader.stripes(17))), rgba_to_gray(rgba))
+
+
+def test_band_reader_band_count_and_shape_mismatch(tmp_path):
+    import json
+    d = write_scene_bands(tmp_path, "s1", synthetic_scene_rgba(40, 40))
+    # drop a band: the manifest now names an incomplete set
+    (d / "B3.npy").unlink()
+    meta = json.loads((d / "scene.json").read_text())
+    meta["bands"] = [b for b in meta["bands"] if b != "B3"]
+    (d / "scene.json").write_text(json.dumps(meta))
+    with pytest.raises(ValueError, match="band set"):
+        BandSceneReader(d)
+    # wrong-shape band
+    d2 = write_scene_bands(tmp_path, "s2", synthetic_scene_rgba(40, 40))
+    np.save(d2 / "B3.npy", np.zeros((40, 39), np.uint8))
+    with pytest.raises(ValueError, match="shape"):
+        BandSceneReader(d2)
+
+
+def test_band_reader_truncated_file(tmp_path):
+    d = write_scene_bands(tmp_path, "s3", synthetic_scene_rgba(64, 64))
+    path = d / "B4.npy"
+    path.write_bytes(path.read_bytes()[:200])   # cut the data section
+    with pytest.raises(IOError, match="truncated or corrupt"):
+        BandSceneReader(d)
+
+
+def test_iter_tile_batches_matches_bundle_scenes(tmp_path):
+    scenes = [synthetic_scene(100, 90, seed=i) for i in range(3)]
+    eager = bundle_scenes(scenes, CFG)
+    readers = [ArraySceneReader(s, f"s{i}") for i, s in enumerate(scenes)]
+    batches = list(iter_tile_batches(readers, CFG, batch_tiles=4))
+    assert [i for i, _ in batches] == list(range(len(batches)))
+    tiles = np.concatenate([b.tiles for _, b in batches])
+    headers = np.concatenate([b.headers for _, b in batches])
+    # every batch is fixed-shape; the tail is pad-flagged
+    assert all(len(b) == 4 for _, b in batches)
+    n = len(eager)
+    np.testing.assert_array_equal(tiles[:n], eager.tiles)
+    np.testing.assert_array_equal(headers[:n], eager.headers)
+    assert (headers[n:, 5] == 1).all()          # pad flag on the remainder
+
+
+def test_batch_slices_cover_exactly():
+    for n, w in [(8, 2), (7, 3), (5, 5), (9, 4), (3, 1)]:
+        slices = batch_slices(n, w)
+        assert len(slices) == w
+        covered = [i for lo, hi in slices for i in range(lo, hi)]
+        assert covered == list(range(n))
+
+
+def test_sliced_batches_equal_full_stream():
+    scenes = [synthetic_scene(100, 90, seed=i) for i in range(3)]
+    readers = [ArraySceneReader(s, f"s{i}") for i, s in enumerate(scenes)]
+    full = dict(iter_tile_batches(readers, CFG, batch_tiles=4))
+    n = count_batches([r.shape for r in readers], CFG, 4)
+    assert len(full) == n
+    for w in (2, 3):
+        got = {}
+        for lo, hi in batch_slices(n, w):
+            got.update(iter_tile_batches(readers, CFG, 4,
+                                         start=lo, stop=hi))
+        assert got.keys() == full.keys()
+        for i in full:
+            np.testing.assert_array_equal(got[i].tiles, full[i].tiles)
+            np.testing.assert_array_equal(got[i].headers, full[i].headers)
+
+
+def test_sliced_batches_skip_unneeded_scenes():
+    class CountingReader(ArraySceneReader):
+        reads = 0
+
+        def read_rows(self, y0, y1):
+            CountingReader.reads += 1
+            return super().read_rows(y0, y1)
+
+    scenes = [synthetic_scene(128, 128, seed=i) for i in range(4)]
+    readers = [CountingReader(s, f"s{i}") for i, s in enumerate(scenes)]
+    n = count_batches([r.shape for r in readers], CFG, 4)
+    # the first worker's slice must not touch the last scene
+    lo, hi = batch_slices(n, 2)[0]
+    CountingReader.reads = 0
+    list(iter_tile_batches(readers, CFG, 4, start=lo, stop=hi))
+    reads_slice = CountingReader.reads
+    CountingReader.reads = 0
+    list(iter_tile_batches(readers, CFG, 4))
+    assert reads_slice < CountingReader.reads
+
+
+def test_prefetcher_yields_everything_in_order():
+    with Prefetcher(iter(range(20)), depth=2) as pf:
+        assert list(pf) == list(range(20))
+
+
+def test_prefetcher_propagates_producer_error():
+    def boom():
+        yield 1
+        yield 2
+        raise IOError("scene truncated mid-stream")
+
+    pf = Prefetcher(boom(), depth=2)
+    got = []
+    with pytest.raises(IOError, match="truncated mid-stream"):
+        for x in pf:
+            got.append(x)
+    assert got == [1, 2]
+    pf.close()
+
+
+def test_prefetcher_close_unblocks_producer():
+    """A consumer abandoning iteration must not leave the producer thread
+    wedged on a full queue."""
+    produced = []
+
+    def slow_infinite():
+        i = 0
+        while True:
+            produced.append(i)
+            yield i
+            i += 1
+
+    pf = Prefetcher(slow_infinite(), depth=2)
+    assert next(pf) == 0
+    pf.close()
+    assert not pf._thread.is_alive()
+    # producer stopped near the queue depth, not unboundedly
+    assert len(produced) <= 8
+
+
+def test_prefetcher_error_in_first_item():
+    def bad():
+        raise ValueError("no scenes")
+        yield  # noqa: unreachable — makes this a generator
+
+    with pytest.raises(ValueError, match="no scenes"):
+        next(Prefetcher(bad(), depth=1))
+
+
+def test_pipelined_extraction_bit_identical_to_eager(tmp_path):
+    """The acceptance property: streaming + batching + worker slicing
+    changes nothing about extraction output."""
+    import jax
+    from repro.core.engine import extract_features_multi
+    scenes = [synthetic_scene_rgba(100, 90, seed=i) for i in range(2)]
+    dirs = [write_scene_bands(tmp_path, f"s{i}", s)
+            for i, s in enumerate(scenes)]
+    readers = [BandSceneReader(d) for d in dirs]
+    eager = bundle_scenes(scenes, CFG)
+    algs = ("harris", "fast")
+    fn = jax.jit(lambda t, h: extract_features_multi(t, h, algs, CFG))
+    # eager reference, batch by batch over the same flat order
+    n_b = count_batches([r.shape for r in readers], CFG, 4)
+    ref = {}
+    padded = eager.pad_to(n_b * 4)
+    for i in range(n_b):
+        s = slice(i * 4, (i + 1) * 4)
+        ref[i] = jax.device_get(fn(padded.tiles[s], padded.headers[s]))
+    for w in (1, 2):
+        got = {}
+        for lo, hi in batch_slices(n_b, w):
+            with Prefetcher(iter_tile_batches(readers, CFG, 4,
+                                              start=lo, stop=hi)) as pf:
+                for idx, bundle in pf:
+                    got[idx] = jax.device_get(fn(bundle.tiles,
+                                                 bundle.headers))
+        assert got.keys() == ref.keys()
+        for i in ref:
+            for alg in algs:
+                for k in ref[i][alg]:
+                    np.testing.assert_array_equal(
+                        np.asarray(got[i][alg][k]),
+                        np.asarray(ref[i][alg][k]), err_msg=f"{i}/{alg}/{k}")
+
+
+def test_prefetcher_device_put_stages_batches():
+    """device_put staging with a (tiles, headers) sharding pair handles
+    the (index, TileBundle) tuples the batch iterator yields."""
+    import jax
+    from jax.sharding import NamedSharding
+    from repro.distributed.sharding import batch_pspec, data_mesh
+    scenes = [synthetic_scene(100, 90, seed=0)]
+    readers = [ArraySceneReader(scenes[0], "s0")]
+    mesh = data_mesh(1)
+    pair = (NamedSharding(mesh, batch_pspec(mesh, 3)),
+            NamedSharding(mesh, batch_pspec(mesh, 2)))
+    ref = dict(iter_tile_batches(readers, CFG, 4))
+    with Prefetcher(iter_tile_batches(readers, CFG, 4), depth=2,
+                    device_put=True, sharding=pair) as pf:
+        for idx, bundle in pf:
+            assert isinstance(bundle.tiles, jax.Array)
+            assert isinstance(bundle.headers, jax.Array)
+            np.testing.assert_array_equal(np.asarray(bundle.tiles),
+                                          ref[idx].tiles)
+            np.testing.assert_array_equal(np.asarray(bundle.headers),
+                                          ref[idx].headers)
+
+
+def test_sliced_batches_stop_reading_after_slice():
+    """A worker slice ending mid-scene must not stream the boundary
+    scene's remaining stripes."""
+    class CountingReader(ArraySceneReader):
+        reads = 0
+
+        def read_rows(self, y0, y1):
+            CountingReader.reads += 1
+            return super().read_rows(y0, y1)
+
+    # one tall scene, 1-row stripes: reads past the slice are visible
+    reader = CountingReader(synthetic_scene(64 * 6, 64, seed=0), "s0")
+    n = count_batches([reader.shape], CFG, 2)
+    assert n == 3
+    CountingReader.reads = 0
+    list(iter_tile_batches([reader], CFG, 2, stripe_rows=1,
+                           start=0, stop=1))
+    reads_first = CountingReader.reads
+    CountingReader.reads = 0
+    list(iter_tile_batches([reader], CFG, 2, stripe_rows=1))
+    assert reads_first < CountingReader.reads / 2
+
+
+def test_prefetcher_overlaps_producer_and_consumer():
+    """With depth 2 the producer runs ahead while the consumer works."""
+    seen_ahead = []
+
+    def producer():
+        for i in range(6):
+            yield i
+
+    pf = Prefetcher(producer(), depth=2)
+    time.sleep(0.2)                 # give the thread time to fill the queue
+    seen_ahead.append(pf._q.qsize())
+    assert list(pf) == list(range(6))
+    assert seen_ahead[0] >= 1       # at least one batch was staged ahead

@@ -315,3 +315,42 @@ def test_concurrent_identical_requests_coalesce():
         assert svc.scheduler.items == 1       # one WorkItem served both
     finally:
         svc.close()
+
+
+def test_identical_tiles_at_different_positions_never_alias():
+    """Results carry scene-global coordinates (ys = ty·tile + local), so
+    pixel-identical tiles at different grid positions have different
+    correct outputs: the cache/coalescing key must fold the header's
+    position, or the second position is served the first one's
+    coordinates."""
+    svc = make_service(cache_entries=128)
+    try:
+        svc.warmup([("harris",)])
+        gray = synthetic_scene(32, 32, seed=99)
+        tile, header0 = svc.table.pad_to_bucket(gray, 32)
+        header1 = header0.copy()
+        header1[1], header1[2] = 2, 3          # same pixels, grid (2, 3)
+        cfgd = svc._cfg_digest(32)
+
+        def run(header):
+            part = svc._submit_tile(tile, header, 32, ("harris",), cfgd,
+                                    block=True)
+            res = dict(part.cached)
+            if part.future is not None:
+                computed, _ = part.future.result(60)
+                res.update(computed)
+            return res["harris"]
+
+        r0, r1 = run(header0), run(header1)
+        valid = np.asarray(r0["top_valid"]).astype(bool)
+        assert valid.any()
+        t = svc.table.cfg_for(32).tile
+        # position must be baked into the coordinates, not aliased away
+        np.testing.assert_array_equal(
+            np.asarray(r1["top_ys"])[valid],
+            np.asarray(r0["top_ys"])[valid] + 2 * t)
+        np.testing.assert_array_equal(
+            np.asarray(r1["top_xs"])[valid],
+            np.asarray(r0["top_xs"])[valid] + 3 * t)
+    finally:
+        svc.close()
