@@ -1,15 +1,27 @@
-"""Descriptor-matcher micro-benchmark (Hamming vs L2, production vs oracle).
+"""Descriptor-matcher benchmark + CI gates (dispatched vs oracle, streaming
+scale smoke, approx-index recall).
 
-Times the production matcher formulation (`kernels/matcher.best2_scan`: the
-packed-word SWAR-popcount / dot-expansion chunked scan — exactly what the
-Pallas kernel runs per query block) against the naive jnp oracle
-(`kernels/ref.match_best2`: bit-unpacked Hamming / full-matrix L2), and
-checks Pallas-kernel parity in interpret mode (Hamming must be
-bit-identical; interpret-mode wall time itself is not meaningful perf,
-same reporting convention as ``bench_scalespace``).
+Rows / gates (all raise on failure, which fails the CI bench step):
 
-Default sizes are the extraction defaults: 256-bit packed BRIEF/ORB words
-and 128-d SIFT floats over a scene's top-K set.
+* ``matcher/{hamming,l2}`` — the *dispatched* `ops.match_best2` (whatever
+  path `kernels/dispatch.py` picked for this host) timed against the naive
+  jnp oracle (`kernels/ref.match_best2`).  **Gate: dispatched L2 must be
+  >= 1.0x the oracle** (one re-measure allowed for CPU-quota noise) — the
+  0.06x reading in BENCH_61e2246 would fail this build.  Parity of all
+  four dispatch paths (jnp_full / jnp_stream / pallas_resident /
+  pallas_stream, kernels in interpret mode on CPU) against the oracle is
+  asserted on every run: Hamming bit-identical, L2 allclose + identical
+  argbest.
+* ``matcher/stream_1M`` — a 1,000,000-row packed-Hamming database scanned
+  by the dispatched path.  **Gates: the dispatcher must resolve to a
+  streaming path** (no materializing fallback — the old VMEM gate would
+  have silently fallen back) **and the scan must agree bit-identically
+  with the blocked oracle on a sampled query subset.**
+* ``matcher/approx_recall`` — `core/matching.match_pair(mode="approx")`
+  (multi-probe LSH + exact re-rank) on BRIEF descriptors extracted from
+  two overlapping crops of a ``synthetic_scene``.  **Gate: >= 0.95 of the
+  exact pipeline's accepted matches keep the same best index at default
+  probes.**
 
     PYTHONPATH=src python -m benchmarks.run --quick      # CI entry
     PYTHONPATH=src python -m benchmarks.bench_matcher    # standalone
@@ -17,12 +29,19 @@ and 128-d SIFT floats over a scene's top-K set.
 from __future__ import annotations
 
 import argparse
+import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.run import _bench
+
+STREAM_DB_ROWS = 1_000_000
+STREAM_QUERIES = 128
+STREAM_SAMPLE = 16          # queries cross-checked against the blocked oracle
+RECALL_FLOOR = 0.95
+L2_SPEEDUP_FLOOR = 1.0
 
 
 def make_descriptors(n: int, seed: int, metric: str):
@@ -34,7 +53,27 @@ def make_descriptors(n: int, seed: int, metric: str):
     return jnp.asarray(d / np.linalg.norm(d, axis=-1, keepdims=True))
 
 
-def run(quick: bool = False):
+def _assert_paths_match_oracle(q, db, valid, metric):
+    """Every dispatch path against the independent oracle formulation."""
+    from repro.kernels import dispatch, ops, ref
+    o = [np.asarray(x) for x in ref.match_best2(q, db, valid, metric=metric)]
+    for path in dispatch.MATCH_PATHS:
+        got = [np.asarray(x) for x in ops.match_best2(
+            q, db, valid, metric=metric, path=path, interpret=True)]
+        if metric == "hamming":   # integer distances: bit-identical
+            ok = all(np.array_equal(a, b) for a, b in zip(got, o))
+        else:
+            ok = (np.allclose(got[0], o[0], rtol=1e-5, atol=1e-4)
+                  and np.allclose(got[1], o[1], rtol=1e-5, atol=1e-4)
+                  and np.array_equal(got[2], o[2]))
+        if not ok:
+            raise RuntimeError(
+                f"matcher path {path!r} disagrees with the oracle "
+                f"(metric={metric})")
+
+
+def bench_dispatched(quick: bool):
+    """Dispatched match_best2 vs oracle; the L2 >= 1.0x gate."""
     from repro.kernels import ops, ref
     n = 256 if quick else 512
     rows = []
@@ -42,43 +81,118 @@ def run(quick: bool = False):
         q = make_descriptors(n, 0, metric)
         db = make_descriptors(n, 1, metric)
         valid = jnp.ones((n,), jnp.bool_)
-        prod = jax.jit(lambda q, d, v, m=metric:
-                       ops.match_best2(q, d, v, metric=m))
-        orac = jax.jit(lambda q, d, v, m=metric:
-                       ref.match_best2(q, d, v, metric=m))
+        _assert_paths_match_oracle(q, db, valid, metric)
+        path = ops.match_path(n, n, q.shape[1], metric=metric)
+        prod = jax.jit(functools.partial(ops.match_best2, metric=metric))
+        orac = jax.jit(functools.partial(ref.match_best2, metric=metric))
         t_prod = _bench(prod, q, db, valid)
         t_orac = _bench(orac, q, db, valid)
-        a = [np.asarray(x) for x in prod(q, db, valid)]
-        b = [np.asarray(x) for x in orac(q, db, valid)]
-        p = [np.asarray(x) for x in ops.match_best2(
-            q, db, valid, metric=metric, use_pallas=True, interpret=True)]
-        if metric == "hamming":   # integer distances: all three bit-identical
-            ok = (all(np.array_equal(x, y) for x, y in zip(a, b))
-                  and all(np.array_equal(x, y) for x, y in zip(p, b)))
-        else:
-            ok = (np.allclose(a[0], b[0], rtol=1e-5, atol=1e-4)
-                  and np.allclose(p[0], b[0], rtol=1e-5, atol=1e-4)
-                  and np.array_equal(a[2], b[2])
-                  and np.array_equal(p[2], b[2]))
+        if metric == "l2" and t_orac / t_prod < L2_SPEEDUP_FLOOR:
+            # one re-measure: shared CI runners have CPU-quota noise
+            t_prod = _bench(prod, q, db, valid)
+            t_orac = _bench(orac, q, db, valid)
+            if t_orac / t_prod < L2_SPEEDUP_FLOOR:
+                raise RuntimeError(
+                    f"dispatched L2 matcher is {t_orac / t_prod:.2f}x the "
+                    f"jnp oracle (path={path}) — below the "
+                    f"{L2_SPEEDUP_FLOOR:.1f}x gate")
         pairs_per_s = n * n / (t_prod * 1e-6)
         rows.append((f"matcher/{metric}", t_prod,
-                     f"speedup_vs_oracle={t_orac / t_prod:.2f};"
-                     f"pallas_allclose={ok};pairs_per_s={pairs_per_s:.3e}"))
+                     f"speedup_vs_oracle={t_orac / t_prod:.2f};path={path};"
+                     f"pallas_allclose=True;pairs_per_s={pairs_per_s:.3e}"))
     return rows
+
+
+def bench_stream_1m(quick: bool):
+    """One query batch over a million-descriptor DB via the dispatched
+    streaming path; sampled-query bit-parity against the blocked oracle."""
+    from repro.kernels import ops, ref
+    rng = np.random.RandomState(7)
+    nk, nq = STREAM_DB_ROWS, STREAM_QUERIES
+    db = jnp.asarray(rng.randint(0, 2 ** 32, size=(nk, 8),
+                                 dtype=np.uint64).astype(np.uint32))
+    valid = jnp.asarray(rng.rand(nk) > 0.05)
+    q = make_descriptors(nq, 3, "hamming")
+    path = ops.match_path(nq, nk, 8, metric="hamming")
+    if "stream" not in path:
+        raise RuntimeError(
+            f"1M-row DB dispatched to {path!r} — expected a streaming "
+            "path (materializing fallback would re-open the VMEM gate)")
+    fn = jax.jit(functools.partial(ops.match_best2, metric="hamming"))
+    t_us = _bench(fn, q, db, valid, repeats=1)
+    best, second, idx = (np.asarray(x) for x in fn(q, db, valid))
+    sample = np.sort(rng.choice(nq, STREAM_SAMPLE, replace=False))
+    ob, os_, oi = (np.asarray(x) for x in ref.match_best2_blocked(
+        q[sample], db, valid, metric="hamming", block=1 << 14))
+    if not (np.array_equal(best[sample], ob)
+            and np.array_equal(second[sample], os_)
+            and np.array_equal(idx[sample], oi)):
+        raise RuntimeError("streaming 1M-row scan disagrees with the "
+                           "blocked oracle on sampled queries")
+    pairs_per_s = nq * nk / (t_us * 1e-6)
+    return [(f"matcher/stream_1M", t_us,
+             f"path={path};rows={nk};sampled_parity=True;"
+             f"pairs_per_s={pairs_per_s:.3e}")]
+
+
+def _crop_features(scene, alg="brief", tile=64):
+    from repro.configs.difet_paper import DifetConfig
+    from repro.core.bundle import tile_scene
+    from repro.core.engine import extract_features
+    cfg = DifetConfig(tile=tile, halo=24, max_keypoints_per_tile=256,
+                      fast_threshold=0.08)
+    b = tile_scene(scene, cfg)
+    r = jax.jit(lambda t, h: extract_features(t, h, alg, cfg))(
+        b.tiles, b.headers)
+    return (jnp.asarray(r["top_desc"]), jnp.asarray(r["top_valid"]))
+
+
+def bench_approx_recall(quick: bool):
+    """Approx-mode recall vs the exact pipeline on a synthetic scene pair
+    (overlapping crops — the stitching workload's matching geometry)."""
+    import time
+
+    from repro.core import matching
+    from repro.data.landsat import synthetic_scene
+    base = synthetic_scene(200, 320, seed=5, density=4.0)
+    da, va = _crop_features(base[:, :220])
+    db_, vb = _crop_features(base[:, 100:])
+    exact = matching.match_pair(da, va, db_, vb)
+    t0 = time.perf_counter()
+    approx = matching.match_pair(da, va, db_, vb, mode="approx")
+    jax.block_until_ready(approx.idx_b)
+    t_us = (time.perf_counter() - t0) * 1e6     # includes index build
+    acc = np.asarray(exact.ok)
+    if not acc.any():
+        raise RuntimeError("no exact-accepted matches — scene too sparse")
+    agree = np.asarray(approx.idx_b)[acc] == np.asarray(exact.idx_b)[acc]
+    recall = float(agree.mean())
+    if recall < RECALL_FLOOR:
+        raise RuntimeError(
+            f"approx match recall {recall:.3f} < {RECALL_FLOOR} at default "
+            "probes (vs the exact pipeline's accepted matches)")
+    return [("matcher/approx_recall", t_us,
+             f"recall={recall:.3f};accepted={int(acc.sum())};"
+             f"mode=lsh_multiprobe")]
+
+
+def run(quick: bool = False):
+    return (bench_dispatched(quick) + bench_stream_1m(quick)
+            + bench_approx_recall(quick))
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args()
-    failed = False
     print("name,us_per_call,derived")
-    for name, us, derived in run(args.quick):
-        print(f"{name},{us:.1f},{derived}")
-        if "allclose=False" in derived:
-            failed = True
-    if failed:                    # kernel-vs-oracle parity is a CI gate
+    try:
+        rows = run(args.quick)
+    except RuntimeError as e:     # a gate tripped: named failure, exit 1
+        print(f"GATE FAILED: {e}")
         raise SystemExit(1)
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
 
 
 if __name__ == "__main__":

@@ -14,7 +14,13 @@ import numpy as np
 
 
 def _bench(fn, *args, repeats=3):
-    fn(*args)                                   # compile/warm
+    # the warm-up must BLOCK: without it, the warm-up call's compile and
+    # async execution bleed into the timed region and the first-benched
+    # function eats the whole backlog (this exact bug made the production
+    # L2 matcher read 16x slower than its oracle in BENCH_61e2246 — the
+    # regression was the harness, not the matcher)
+    out = fn(*args)                             # compile/warm
+    jax.tree_util.tree_leaves(out)[0].block_until_ready()
     t0 = time.perf_counter()
     for _ in range(repeats):
         out = fn(*args)
@@ -49,10 +55,15 @@ def bench_table1(quick):
 
 def bench_table2(quick):
     from benchmarks.table2_counts import run
-    results = run(scene=256 if quick else 512, ns=(3,) if quick else (3, 20))
+    results, times_us = run(scene=256 if quick else 512,
+                            ns=(3,) if quick else (3, 20))
     out = []
     for (alg, n), c in sorted(results.items()):
-        out.append((f"table2/{alg}_N{n}", 0.0, f"count={c}"))
+        # counts per algorithm come from ONE fused all-algorithm call per
+        # N, so the honest per-row timing is that shared call's warmed
+        # single-rep wall time (rows used to claim us_per_call=0.0)
+        out.append((f"table2/{alg}_N{n}", times_us[n],
+                    f"count={c};fused_call=1"))
     return out
 
 

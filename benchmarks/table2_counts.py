@@ -3,6 +3,8 @@ plus the distributed-equals-single-device invariant (stronger than the
 paper's, which only reports totals)."""
 from __future__ import annotations
 
+import time
+
 import jax
 
 from repro.configs.difet_paper import DifetConfig, PAPER_ALGORITHMS
@@ -12,8 +14,13 @@ from repro.data.landsat import synthetic_scene
 
 
 def run(scene=512, tile=128, ns=(3, 20)):
+    """Returns ``(counts, times_us)``: per-(algorithm, N) feature counts
+    plus one *real* warmed single-rep wall time per N for the fused
+    all-algorithm extraction call that produced them (blocked on
+    completion — the harness used to report ``0.0`` here, which read as
+    free device steps in the BENCH snapshots)."""
     cfg = DifetConfig(tile=tile, halo=24, max_keypoints_per_tile=128)
-    results = {}
+    results, times_us = {}, {}
     for n in ns:
         scenes = [synthetic_scene(scene, scene, seed=i) for i in range(n)]
         bundle = bundle_scenes(scenes, cfg)
@@ -22,19 +29,24 @@ def run(scene=512, tile=128, ns=(3, 20)):
         # to per-algorithm extract_features — same ops on the same inputs)
         fn = jax.jit(lambda t, h: extract_features_multi(
             t, h, PAPER_ALGORITHMS, cfg))
-        res = fn(bundle.tiles, bundle.headers)
+        res = jax.block_until_ready(fn(bundle.tiles, bundle.headers))
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(bundle.tiles, bundle.headers))
+        times_us[n] = (time.perf_counter() - t0) * 1e6
         for alg in PAPER_ALGORITHMS:
             results[(alg, n)] = int(res[alg]["total_count"])
-    return results
+    return results, times_us
 
 
 def main():
-    results = run()
+    results, times_us = run()
     print("# Table 2 analogue: number of features")
     print(f"{'algorithm':12s} {'N=3':>10s} {'N=20':>10s} {'ratio':>7s}")
     for alg in PAPER_ALGORITHMS:
         c3, c20 = results[(alg, 3)], results[(alg, 20)]
         print(f"{alg:12s} {c3:10d} {c20:10d} {c20/max(c3,1):7.2f}")
+    for n, us in sorted(times_us.items()):
+        print(f"# fused extraction N={n}: {us / 1e3:.1f} ms")
     return results
 
 

@@ -27,6 +27,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import index as kindex
 from repro.kernels import ops as kops
 
 # any real distance is far below this; masked/overflow slots are far above
@@ -60,11 +61,9 @@ def infer_metric(desc) -> str:
     return "hamming" if desc.dtype == jnp.uint32 else "l2"
 
 
-@functools.partial(jax.jit, static_argnames=("metric", "use_pallas"))
-def match_pair(desc_a, valid_a, desc_b, valid_b, ratio: float = 0.8, *,
-               metric: Optional[str] = None,
-               use_pallas: bool = False) -> PairMatches:
-    """Mutual-NN + Lowe ratio matches from set a into set b.
+def _filter_matches(valid_a, best, second, idx, ridx, ratio, metric
+                    ) -> PairMatches:
+    """Mutual + ratio acceptance shared by the exact and approx modes.
 
     The ratio test compares squared L2 distances, so the threshold is
     squared for float descriptors; Hamming distances are linear.  A query
@@ -73,19 +72,61 @@ def match_pair(desc_a, valid_a, desc_b, valid_b, ratio: float = 0.8, *,
     matcher) makes the surviving match set independent of database order,
     hence partition-invariant (tests/test_matcher.py).
     """
-    metric = metric or infer_metric(desc_a)
     r = ratio * ratio if metric == "l2" else ratio
-    best, second, idx = kops.match_best2(desc_a, desc_b, valid_b,
-                                         metric=metric, use_pallas=use_pallas)
-    _, _, ridx = kops.match_best2(desc_b, desc_a, valid_a,
-                                  metric=metric, use_pallas=use_pallas)
-    ka = desc_a.shape[0]
+    ka = idx.shape[0]
     mutual = jnp.take(ridx, idx) == jnp.arange(ka, dtype=jnp.int32)
     bf = best.astype(jnp.float32)
     sf = second.astype(jnp.float32)
     matched = bf < _MATCHED_CUT           # kills all-masked / empty databases
     ok = (valid_a != 0) & mutual & matched & (bf < r * sf)
     return PairMatches(idx, ok, best)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "use_pallas"))
+def _match_pair_exact(desc_a, valid_a, desc_b, valid_b, ratio, *,
+                      metric: str, use_pallas: Optional[bool]) -> PairMatches:
+    best, second, idx = kops.match_best2(desc_a, desc_b, valid_b,
+                                         metric=metric, use_pallas=use_pallas)
+    _, _, ridx = kops.match_best2(desc_b, desc_a, valid_a,
+                                  metric=metric, use_pallas=use_pallas)
+    return _filter_matches(valid_a, best, second, idx, ridx, ratio, metric)
+
+
+def match_pair(desc_a, valid_a, desc_b, valid_b, ratio: float = 0.8, *,
+               metric: Optional[str] = None, use_pallas: Optional[bool] = None,
+               mode: str = "exact", probes: Optional[int] = None,
+               index_a=None, index_b=None) -> PairMatches:
+    """Mutual-NN + Lowe ratio matches from set a into set b.
+
+    ``mode="exact"`` (default) scores every database row through the
+    benchmark-gated `kernels/ops.match_best2` dispatcher (``use_pallas``
+    forwards to it: None = measured auto-dispatch, True = force the
+    kernels, False = force jnp) — fully jit-compatible.
+
+    ``mode="approx"`` routes both directions through the pre-filter
+    indexes in `kernels/index.py` (multi-probe LSH for packed Hamming
+    bits, k-means inverted lists for L2) with an exact re-rank of the
+    candidate sets, so accepted matches carry true distances and the only
+    approximation is recall.  ``probes`` is the recall knob (more probed
+    buckets -> higher recall, more candidates scored); ``index_a`` /
+    ``index_b`` accept prebuilt `kernels.index.build_index` objects so a
+    database matched against many query sets is indexed once.  Index
+    construction is host-side, so approx mode is eager — call it outside
+    jit.
+    """
+    metric = metric or infer_metric(desc_a)
+    if mode == "exact":
+        return _match_pair_exact(desc_a, valid_a, desc_b, valid_b, ratio,
+                                 metric=metric, use_pallas=use_pallas)
+    if mode != "approx":
+        raise ValueError(f"unknown mode {mode!r}")
+    if index_b is None:
+        index_b = kindex.build_index(desc_b, valid_b, metric=metric)
+    if index_a is None:
+        index_a = kindex.build_index(desc_a, valid_a, metric=metric)
+    best, second, idx = index_b.search(desc_a, probes)
+    _, _, ridx = index_a.search(desc_b, probes)
+    return _filter_matches(valid_a, best, second, idx, ridx, ratio, metric)
 
 
 def _sample_valid(key, ok, shape):
@@ -174,7 +215,7 @@ def estimate_similarity(pa, pb, ok, key=None, tol: float = 2.0, *,
 def register_pair(ya, xa, desc_a, valid_a, yb, xb, desc_b, valid_b,
                   key=None, ratio: float = 0.8, tol: float = 2.0, *,
                   metric: Optional[str] = None, model: str = "translation",
-                  iters: int = 128, use_pallas: bool = False):
+                  iters: int = 128, use_pallas: Optional[bool] = None):
     """Match two scenes' feature sets and estimate the transform between
     them: the one-call registration primitive (vmapped over a pair batch by
     `core/mosaic.py`).  Returns (PairMatches, estimate)."""

@@ -55,7 +55,7 @@ def load_scene_features(store: BundleStore, scene: str,
 
 
 def make_pair_solver(metric: Optional[str], ratio: float, tol: float,
-                     iters: int, use_pallas: bool = False):
+                     iters: int, use_pallas: Optional[bool] = None):
     """jit'd batched registration: every array gains a leading pair axis P;
     one dispatch registers the whole chunk (matcher + RANSAC vmapped)."""
 
@@ -103,14 +103,15 @@ class MatchPhase(ManifestJob):
                  algorithm: str, *, metric: Optional[str] = None,
                  ratio: float = 0.8, tol: float = 2.0, iters: int = 128,
                  pairs_per_step: int = 8, mesh=None,
-                 use_pallas: bool = False, manifest_path=None, seed: int = 0):
+                 use_pallas: Optional[bool] = None, manifest_path=None,
+                 seed: int = 0):
         self.pairs = [tuple(p) for p in pairs]
         self._pair_index = {p: i for i, p in enumerate(self.pairs)}
         self.algorithm = algorithm
         self.mesh = mesh
         self.seed = seed
         self._params = (metric, float(ratio), float(tol), int(iters),
-                        bool(use_pallas))
+                        use_pallas)
         self._chunks = {
             f"pairs_{i:05d}": self.pairs[i * pairs_per_step:
                                          (i + 1) * pairs_per_step]

@@ -1,4 +1,4 @@
-"""Tiled brute-force descriptor matcher kernel (popcount-Hamming + L2).
+"""Tiled brute-force descriptor matcher kernels (popcount-Hamming + L2).
 
 The matching stage pairs every query descriptor against a scene's database
 and keeps the best and second-best distances (the Lowe ratio test needs
@@ -6,27 +6,43 @@ both).  A naive lowering materializes the full [Q, K] distance matrix in
 HBM — for binary descriptors it is even worse, because the obvious jnp
 formulation unpacks 256-bit descriptors into 256 bools (32x the traffic).
 
-This kernel keeps the whole database VMEM-resident: each program owns one
-``QBLOCK``-query block, streams the database in ``KCHUNK`` chunks that never
-leave VMEM, and maintains running (best, second-best, argbest) registers —
-only three [Q]-vectors are written back to HBM.
+Two Pallas kernels cover the database-size spectrum:
+
+* **Resident** (`match_pallas`): the whole database stays VMEM-resident
+  across the query grid; each program owns one ``QBLOCK``-query block and
+  scans the database in chunks that never leave VMEM.  Cheapest when the
+  database fits the VMEM budget (``ops.matcher_fits_vmem``).
+* **Streaming** (`match_pallas_stream`): a second *database* grid
+  dimension tiles the database into ``KBLOCK``-row chunks that Pallas
+  pipelines HBM→VMEM with double-buffered DMA; the (best, second-best,
+  argbest) registers live in the revisited output block, carried in VMEM
+  across the whole database sweep.  One query batch scans millions of
+  descriptors without ever holding more than two chunks on-chip.
+
+Distance formulations (identical across kernels and jnp paths):
 
 * **Hamming (BRIEF/ORB)**: descriptors stay bit-packed as uint32 lanes
   (256 bits = 8 words); per-word XOR + SWAR popcount (the shift-mask-add
   reduction — 5 integer VPU ops per word) summed over words.  Distances
   are exact int32, so kernel/oracle/fallback agree *bit-identically*.
 * **L2 (SIFT/SURF)**: the ``|q|^2 + |k|^2 - 2 q.k`` expansion; the q.k
-  block is one MXU ``dot_general`` per chunk.
+  block is one MXU ``dot_general`` per chunk, fp32-accumulated.  The
+  ``|q|^2`` term is constant per query row, so the scan ranks on the
+  partial ``|k|^2 - 2 q.k`` and adds ``|q|^2`` once at the end — no
+  per-chunk re-broadcast of the query norms over the [Q, C] block.
 
-``best2_scan`` below is the exact per-block formulation the kernel runs,
-written on jnp values — it doubles as the CPU/fallback path (dispatched by
-``ops.match_best2`` when the database exceeds the VMEM budget or the host
-has no TPU), so fallback and kernel results are the same computation.
+The jnp twins — `best2_full` (one [Q, K] block) and `best2_stream`
+(``lax.scan`` over database chunks, the same carried-register merge the
+streaming kernel runs) — are real production paths, not just fallbacks:
+`kernels/dispatch.py` microbenchmarks them against the kernels per
+(metric, backend, shape-bucket) and `ops.match_best2` routes each call
+site to whichever wins on the current host.
 
 Invalid database slots (validity masks come from capacity-K extraction)
 are forced to a BIG distance before the running update; ties are broken
 toward the smallest database index (``argmin`` first-occurrence + a
-strictly-less merge), so matches are deterministic and partition-invariant.
+strictly-less merge), so matches are deterministic and partition-invariant
+— in every path, streaming included (chunks merge in database order).
 """
 from __future__ import annotations
 
@@ -48,12 +64,42 @@ def kchunk_for(metric: str) -> int:
     return 256 if metric == "hamming" else 1024
 
 
+def kblock_for(metric: str) -> int:
+    """Database rows per streamed chunk (the streaming kernel's DB grid
+    tile and `best2_stream`'s scan step).  Wider than `kchunk_for` — a
+    streamed chunk is also the DMA transfer unit, so it must amortize
+    the HBM round-trip, not just bound the VMEM temporary."""
+    return 512 if metric == "hamming" else 2048
+
+
+def big_for(metric: str):
+    """The masked/initial distance: larger than any real distance, exact
+    in the metric's dtype (int32 Hamming / fp32 inf for L2)."""
+    return jnp.int32(BIG_HAMMING) if metric == "hamming" \
+        else jnp.float32(jnp.inf)
+
+
 def popcount32(x):
     """Per-word population count of a uint32 array (SWAR bit-slicing)."""
     x = x - ((x >> 1) & 0x55555555)
     x = (x & 0x33333333) + ((x >> 2) & 0x33333333)
     x = (x + (x >> 4)) & 0x0F0F0F0F
     return (x * 0x01010101) >> 24          # byte-sum via overflowing multiply
+
+
+def _chunk_dist(q, c, m, metric, big, dn=None):
+    """Distances of one DB chunk: [Q, C], invalid slots forced to big.
+    L2 omits the |q|^2 term (constant per row — callers add it once at
+    the end of the scan); ``dn`` lets callers pass a precomputed |k|^2."""
+    if metric == "hamming":
+        x = q[:, None, :] ^ c[None, :, :]               # [Q, C, W]
+        d = popcount32(x).astype(jnp.int32).sum(axis=-1)
+    else:
+        dot = jax.lax.dot_general(q, c, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+        dn = jnp.sum(c * c, axis=-1) if dn is None else dn
+        d = dn[None, :] - 2.0 * dot
+    return jnp.where(m[None, :] != 0, d, big)
 
 
 def _chunk_best2(d, start, big):
@@ -65,22 +111,42 @@ def _chunk_best2(d, start, big):
     return best, second, arg + jnp.int32(start)
 
 
+def _merge_best2(carry, chunk):
+    """Merge a chunk's (best, second, idx) into the carried registers.
+    Strictly-less ``take`` keeps the earlier (smaller-index) winner on
+    ties, so the merge order — database order — fixes the tie-break."""
+    best, second, bidx = carry
+    cb, cs, ci = chunk
+    take = cb < best
+    second = jnp.where(take, jnp.minimum(best, cs), jnp.minimum(second, cb))
+    bidx = jnp.where(take, ci, bidx)
+    best = jnp.where(take, cb, best)
+    return best, second, bidx
+
+
+def _l2_qnorm(q, best, second):
+    """Fold the per-query |q|^2 back into the scanned partial distances
+    (masked slots are +inf, which absorbs the add)."""
+    qn = jnp.sum(q * q, axis=-1)
+    return best + qn, second + qn
+
+
 def best2_scan(q, db, db_valid, *, metric: str, kchunk: int = None):
-    """Running best/second-best over database chunks.
+    """Running best/second-best over database chunks (unrolled loop).
 
     q [Q, D], db [K, D], db_valid [K] (bool or int) -> (best [Q],
-    second [Q], idx [Q] int32).  Runs on VMEM values inside the kernel and
-    on plain arrays as the jnp fallback — identical formulation either way.
+    second [Q], idx [Q] int32).  This is the exact per-block formulation
+    the resident kernel runs on VMEM values; on plain arrays it doubles
+    as a small-database jnp path.  The python loop unrolls into the
+    trace, so it is only for databases a few chunks long — `best2_stream`
+    is the rolled (lax.scan) twin for large databases.
     """
     nq, nk = q.shape[0], db.shape[0]
     kchunk = kchunk_for(metric) if kchunk is None else kchunk
-    if metric == "hamming":
-        big = jnp.int32(BIG_HAMMING)
-    elif metric == "l2":
-        big = jnp.float32(jnp.inf)
-        qn = jnp.sum(q * q, axis=-1)
+    big = big_for(metric)
+    if metric == "l2":
         dn = jnp.sum(db * db, axis=-1)
-    else:
+    elif metric != "hamming":
         raise ValueError(f"unknown metric {metric!r}")
     best = jnp.full((nq,), big)
     second = jnp.full((nq,), big)
@@ -88,21 +154,67 @@ def best2_scan(q, db, db_valid, *, metric: str, kchunk: int = None):
     for start in range(0, nk, kchunk):
         c = db[start:start + kchunk]
         m = db_valid[start:start + kchunk]
-        if metric == "hamming":
-            x = q[:, None, :] ^ c[None, :, :]               # [Q, C, W]
-            d = popcount32(x).astype(jnp.int32).sum(axis=-1)
-        else:
-            dot = jax.lax.dot_general(q, c, (((1,), (1,)), ((), ())),
-                                      preferred_element_type=jnp.float32)
-            d = qn[:, None] + dn[start:start + kchunk][None, :] - 2.0 * dot
-        d = jnp.where(m[None, :] != 0, d, big)
-        cb, cs, ci = _chunk_best2(d, start, big)
-        take = cb < best                  # ties keep the earlier (smaller) idx
-        second = jnp.where(take, jnp.minimum(best, cs), jnp.minimum(second, cb))
-        bidx = jnp.where(take, ci, bidx)
-        best = jnp.where(take, cb, best)
+        d = _chunk_dist(q, c, m, metric, big,
+                        dn=None if metric == "hamming"
+                        else dn[start:start + kchunk])
+        best, second, bidx = _merge_best2(
+            (best, second, bidx), _chunk_best2(d, start, big))
+    if metric == "l2":
+        best, second = _l2_qnorm(q, best, second)
     return best, second, bidx
 
+
+def best2_full(q, db, db_valid, *, metric: str):
+    """One-block best/second-best: the whole [Q, K] distance matrix in a
+    single chunk.  On hosts where materializing the matrix is cheap (CPU
+    XLA; small K) this is the fastest formulation — the dispatcher picks
+    it per backend (`kernels/dispatch.py`)."""
+    big = big_for(metric)
+    d = _chunk_dist(q, db, db_valid, metric, big)
+    best, second, bidx = _chunk_best2(d, 0, big)
+    if metric == "l2":
+        best, second = _l2_qnorm(q, best, second)
+    return best, second, bidx
+
+
+def best2_stream(q, db, db_valid, *, metric: str, kchunk: int = None):
+    """Rolled streaming scan: ``lax.scan`` over [K/C, C]-chunked database
+    slabs with carried (best, second, argbest) registers — the jnp twin
+    of the streaming Pallas kernel, and the path that lets one query
+    batch scan millions of descriptors on any backend (constant working
+    set, no [Q, K] materialization, trace size independent of K).
+
+    The database is zero-padded to a chunk multiple (padding rows are
+    masked invalid), so tail chunks need no special casing.
+    """
+    nq, nk = q.shape[0], db.shape[0]
+    kchunk = kblock_for(metric) if kchunk is None else kchunk
+    big = big_for(metric)
+    if metric not in ("hamming", "l2"):
+        raise ValueError(f"unknown metric {metric!r}")
+    pad = (-nk) % kchunk
+    if pad:
+        db = jnp.pad(db, ((0, pad), (0, 0)))
+        db_valid = jnp.pad(db_valid.astype(jnp.int32), (0, pad))
+    n_chunks = (nk + pad) // kchunk
+    dbc = db.reshape(n_chunks, kchunk, db.shape[1])
+    mc = db_valid.reshape(n_chunks, kchunk)
+
+    def step(carry, xs):
+        c, m, start = xs
+        d = _chunk_dist(q, c, m, metric, big)
+        return _merge_best2(carry, _chunk_best2(d, start, big)), None
+
+    init = (jnp.full((nq,), big), jnp.full((nq,), big),
+            jnp.zeros((nq,), jnp.int32))
+    starts = jnp.arange(n_chunks, dtype=jnp.int32) * kchunk
+    (best, second, bidx), _ = jax.lax.scan(step, init, (dbc, mc, starts))
+    if metric == "l2":
+        best, second = _l2_qnorm(q, best, second)
+    return best, second, bidx
+
+
+# ---- resident kernel (whole DB in VMEM across the query grid) --------------
 
 def match_kernel(q_ref, db_ref, mask_ref, best_ref, sec_ref, idx_ref, *,
                  metric: str, kchunk: int):
@@ -132,6 +244,80 @@ def match_pallas(q, db, db_mask, *, metric: str, interpret: bool,
                   pl.BlockSpec((nk, d), lambda i: (0, 0)),
                   pl.BlockSpec((1, nk), lambda i: (0, 0))],
         out_specs=[pl.BlockSpec((1, QBLOCK), lambda i: (i, 0))] * 3,
+        out_shape=[jax.ShapeDtypeStruct((grid[0], QBLOCK), dist_dt),
+                   jax.ShapeDtypeStruct((grid[0], QBLOCK), dist_dt),
+                   jax.ShapeDtypeStruct((grid[0], QBLOCK), jnp.int32)],
+        interpret=interpret,
+    )(q, db, db_mask)
+    return tuple(o.reshape(-1) for o in outs)
+
+
+# ---- streaming kernel (tiled DB grid, carried registers) -------------------
+
+def stream_kernel(q_ref, db_ref, mask_ref, best_ref, sec_ref, idx_ref, *,
+                  metric: str, kblock: int, n_kblocks: int):
+    """One (query-block, DB-chunk) grid step of the streaming matcher.
+
+    The DB axis is the *minor* grid dimension, so for a fixed query block
+    the output refs map to the same [1, QBLOCK] block across every DB
+    step — Pallas keeps them VMEM-resident between revisits, making them
+    the carried (best, second, argbest) registers; they are initialized
+    at the first chunk and written back to HBM only after the last.
+    Meanwhile ``db_ref``/``mask_ref`` advance along the DB grid, which
+    Pallas pipelines as double-buffered HBM→VMEM DMA (chunk k+1 streams
+    in while chunk k is scored).  L2 scans the qn-free partial distance
+    and folds |q|^2 in at the final chunk (see module docstring)."""
+    ki = pl.program_id(1)
+    big = big_for(metric)
+    dt = best_ref.dtype
+
+    @pl.when(ki == 0)
+    def _init():
+        best_ref[...] = jnp.full(best_ref.shape, big, dt)
+        sec_ref[...] = jnp.full(sec_ref.shape, big, dt)
+        idx_ref[...] = jnp.zeros(idx_ref.shape, jnp.int32)
+
+    q = q_ref[...]
+    d = _chunk_dist(q, db_ref[...], mask_ref[0], metric, big)
+    chunk = _chunk_best2(d, 0, big)
+    chunk = (chunk[0], chunk[1], chunk[2] + ki * kblock)  # global indices
+    best, second, bidx = _merge_best2(
+        (best_ref[0], sec_ref[0], idx_ref[0]), chunk)
+    idx_ref[0] = bidx
+    if metric == "l2":
+        last = ki == n_kblocks - 1
+        qn = jnp.sum(q * q, axis=-1)
+        best_ref[0] = jnp.where(last, best + qn, best)
+        sec_ref[0] = jnp.where(last, second + qn, second)
+    else:
+        best_ref[0] = best
+        sec_ref[0] = second
+
+
+def match_pallas_stream(q, db, db_mask, *, metric: str, interpret: bool,
+                        kblock: int = None):
+    """Streaming/tiled-database matcher: q [NQ, D] (NQ a QBLOCK multiple),
+    db [NK, D] (NK a KBLOCK multiple — pad rows masked invalid),
+    db_mask [1, NK] int32 -> (best [NQ], second [NQ], idx [NQ]).
+
+    VMEM working set is ~2 DB chunks + 1 query block + the chunk
+    temporaries, independent of NK — the database streams from HBM, so
+    NK is bounded by HBM, not by the 12 MiB VMEM budget that gates the
+    resident kernel."""
+    nq, d = q.shape
+    nk = db.shape[0]
+    kblock = kblock_for(metric) if kblock is None else kblock
+    dist_dt = jnp.int32 if metric == "hamming" else jnp.float32
+    grid = (nq // QBLOCK, nk // kblock)
+    kern = functools.partial(stream_kernel, metric=metric, kblock=kblock,
+                             n_kblocks=grid[1])
+    outs = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec((QBLOCK, d), lambda i, k: (i, 0)),
+                  pl.BlockSpec((kblock, d), lambda i, k: (k, 0)),
+                  pl.BlockSpec((1, kblock), lambda i, k: (0, k))],
+        out_specs=[pl.BlockSpec((1, QBLOCK), lambda i, k: (i, 0))] * 3,
         out_shape=[jax.ShapeDtypeStruct((grid[0], QBLOCK), dist_dt),
                    jax.ShapeDtypeStruct((grid[0], QBLOCK), dist_dt),
                    jax.ShapeDtypeStruct((grid[0], QBLOCK), jnp.int32)],

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.pyramid import gaussian_kernel_1d, octave_increments
+from repro.kernels import dispatch as _dispatch
 from repro.kernels import harris as _harris
 from repro.kernels import blur as _blur
 from repro.kernels import fastscore as _fast
@@ -146,10 +147,68 @@ def matcher_fits_vmem(nk: int, d: int, metric: str = "l2") -> bool:
     return matcher_vmem_bytes(nk, d, metric) <= VMEM_BUDGET_BYTES
 
 
-@functools.partial(jax.jit, static_argnames=("metric", "use_pallas",
-                                             "interpret"))
+MATCH_PATHS = _dispatch.MATCH_PATHS
+
+
+def match_path(nq: int, nk: int, d: int, *, metric: str = "l2",
+               use_pallas: bool = None, backend: str = None) -> str:
+    """Resolve which implementation a ``match_best2`` call of this shape
+    will take — one of ``jnp_full | jnp_stream | pallas_resident |
+    pallas_stream`` (`kernels/dispatch.py`).
+
+    ``use_pallas=True`` forces a kernel: the VMEM-resident one when the
+    database fits the budget, else the streaming tiled-DB kernel — there
+    is no silent jnp fallback anymore.  ``use_pallas=False`` restricts to
+    the jnp formulations; ``None`` (the default) lets the per-(metric,
+    backend, shape-bucket) microbenchmark decide.  Benchmarks and tests
+    call this to *assert* the dispatch decision (e.g. that a million-row
+    database streams rather than falling back).
+    """
+    if use_pallas is True:
+        if matcher_fits_vmem(nk, d, metric) and nk <= _dispatch.FULL_MAX_ROWS:
+            return "pallas_resident"
+        return "pallas_stream"
+    return _dispatch.choose_path(metric, nq, nk, d, backend=backend,
+                                 use_pallas=use_pallas)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "path", "interpret"))
+def _match_impl(queries, db, db_valid, *, metric: str, path: str,
+                interpret: bool):
+    """One matcher implementation, jit'd per (metric, path): padding and
+    lane alignment happen inside the trace so callers stay shape-exact."""
+    nq, nk = queries.shape[0], db.shape[0]
+    if metric == "l2":
+        queries = queries.astype(jnp.float32)
+        db = db.astype(jnp.float32)
+    if path == "jnp_full":
+        return _matcher.best2_full(queries, db, db_valid, metric=metric)
+    if path == "jnp_stream":
+        return _matcher.best2_stream(queries, db, db_valid, metric=metric)
+    if metric == "l2":
+        extra = (-queries.shape[1]) % LANE     # zero-pad D to a lane multiple
+        if extra:
+            queries = jnp.pad(queries, ((0, 0), (0, extra)))
+            db = jnp.pad(db, ((0, 0), (0, extra)))
+    pad_q = (-nq) % MATCH_QBLOCK
+    qp = jnp.pad(queries, ((0, pad_q), (0, 0))) if pad_q else queries
+    mask = db_valid.astype(jnp.int32)
+    if path == "pallas_resident":
+        best, second, idx = _matcher.match_pallas(
+            qp, db, mask[None, :], metric=metric, interpret=interpret)
+    else:                                      # pallas_stream
+        pad_k = (-nk) % _matcher.kblock_for(metric)
+        if pad_k:                              # pad rows masked invalid
+            db = jnp.pad(db, ((0, pad_k), (0, 0)))
+            mask = jnp.pad(mask, (0, pad_k))
+        best, second, idx = _matcher.match_pallas_stream(
+            qp, db, mask[None, :], metric=metric, interpret=interpret)
+    return best[:nq], second[:nq], idx[:nq]
+
+
 def match_best2(queries, db, db_valid=None, *, metric: str = "l2",
-                use_pallas: bool = False, interpret: bool = None):
+                use_pallas: bool = None, interpret: bool = None,
+                path: str = None):
     """Per-query (best, second-best, argbest) over a masked descriptor DB.
 
     queries [Q, D], db [K, D], db_valid [K] (None = all valid).  For
@@ -158,37 +217,40 @@ def match_best2(queries, db, db_valid=None, *, metric: str = "l2",
     ``metric="l2"`` inputs are cast to fp32 and distances are *squared* L2
     (monotonic for ranking; the ratio test squares its threshold).
 
-    Dispatch (same pattern as the fused scale-space kernel): the Pallas
-    kernel runs when requested AND the database working set fits the VMEM
-    budget; otherwise the identical chunked jnp formulation
-    (``matcher.best2_scan``) runs — on CPU hosts in interpret-mode testing
-    the kernel validates numerics, not speed.
+    Dispatch is **benchmark-gated** (`kernels/dispatch.py`): by default
+    (``use_pallas=None``) a one-shot microbenchmark per (metric, backend,
+    shape-bucket) — cached on disk — picks the fastest of the jnp
+    formulations and (on TPU) the Pallas kernels, so a backend where one
+    path regresses silently gets the fast one.  ``use_pallas=True``
+    forces a kernel (resident under the VMEM budget, streaming above it
+    — a million-row database streams instead of falling back);
+    ``use_pallas=False`` forces jnp; ``path`` pins an exact
+    implementation (one of `MATCH_PATHS`, mainly for tests/benchmarks).
+    Every path computes the same distances with the same masking and
+    smallest-index tie-breaks, so the choice is performance, never
+    numerics (Hamming results are bit-identical across all four).
+
+    The decision needs only shapes, so calls from inside ``jit``/``vmap``
+    traces resolve at trace time and bake the chosen path into the
+    compiled program.
     """
     interpret = _interpret_default() if interpret is None else interpret
     nq, nk = queries.shape[0], db.shape[0]
     if db_valid is None:
         db_valid = jnp.ones((nk,), jnp.bool_)
-    if metric == "l2":
-        queries = queries.astype(jnp.float32)
-        db = db.astype(jnp.float32)
-        extra = (-queries.shape[1]) % LANE     # zero-pad D to a lane multiple
-        if extra:
-            queries = jnp.pad(queries, ((0, 0), (0, extra)))
-            db = jnp.pad(db, ((0, 0), (0, extra)))
-    elif metric == "hamming":
+    if metric == "hamming":
         if queries.dtype != jnp.uint32 or db.dtype != jnp.uint32:
             raise TypeError("hamming matching needs bit-packed uint32 "
                             "descriptors (descriptors.pack_bits)")
-    else:
+    elif metric != "l2":
         raise ValueError(f"unknown metric {metric!r}")
-    if use_pallas and matcher_fits_vmem(nk, queries.shape[1], metric):
-        pad_q = (-nq) % MATCH_QBLOCK
-        qp = jnp.pad(queries, ((0, pad_q), (0, 0))) if pad_q else queries
-        mask = db_valid.astype(jnp.int32)[None, :]
-        best, second, idx = _matcher.match_pallas(qp, db, mask, metric=metric,
-                                                  interpret=interpret)
-        return best[:nq], second[:nq], idx[:nq]
-    return _matcher.best2_scan(queries, db, db_valid, metric=metric)
+    if path is None:
+        path = match_path(nq, nk, queries.shape[1], metric=metric,
+                          use_pallas=use_pallas)
+    elif path not in MATCH_PATHS:
+        raise ValueError(f"unknown path {path!r} (want one of {MATCH_PATHS})")
+    return _match_impl(queries, db, db_valid, metric=metric, path=path,
+                       interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("scales_per_octave",

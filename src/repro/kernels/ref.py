@@ -136,6 +136,31 @@ def match_best2(q, db, db_valid, *, metric: str):
     return best, second, arg
 
 
+def match_best2_blocked(q, db, db_valid, *, metric: str,
+                        block: int = 65536):
+    """Big-database oracle: `match_best2` evaluated over database blocks
+    with a running cross-block merge, so parity checks against streamed
+    production paths scale to millions of rows without ever unpacking or
+    materializing the whole [Q, K] matrix.  Same distances, same
+    smallest-index tie-break (strictly-less merge in database order) —
+    results equal `match_best2` exactly."""
+    nq, nk = q.shape[0], db.shape[0]
+    big = jnp.int32(1 << 30) if metric == "hamming" else jnp.float32(jnp.inf)
+    best = np.full((nq,), np.asarray(big))
+    second = np.full((nq,), np.asarray(big))
+    bidx = np.zeros((nq,), np.int32)
+    for start in range(0, nk, block):
+        cb, cs, ci = (np.asarray(o) for o in match_best2(
+            q, db[start:start + block], db_valid[start:start + block],
+            metric=metric))
+        ci = ci + np.int32(start)
+        take = cb < best
+        second = np.where(take, np.minimum(best, cs), np.minimum(second, cb))
+        bidx = np.where(take, ci, bidx)
+        best = np.where(take, cb, best)
+    return jnp.asarray(best), jnp.asarray(second), jnp.asarray(bidx)
+
+
 def fast_score(img, *, threshold: float = 0.15, arc: int = 9):
     from repro.core.detectors import FAST_OFFSETS
     h, w = img.shape[-2:]

@@ -85,9 +85,17 @@ def run_closed(svc, pool, algs, n_requests, concurrency):
 
 
 def run_open(svc, pool, algs, n_requests, rate):
-    """Open-loop: inject at a fixed rate; overload is shed, not queued."""
+    """Open-loop: inject at a fixed rate; overload is shed, not queued.
+
+    Latency is the service's own completion stamp
+    (``timing["latency_s"]``: batch completion minus enqueue), NOT the
+    handle-drain wall time — the drain loop below walks handles in submit
+    order, so timing ``h.result()`` returns would add each handle's queue
+    position behind its predecessors to its reported latency (at
+    injection rates above service rate, that inflated every percentile
+    toward the full run length)."""
     period = 1.0 / rate
-    handles, submit_ts, rejected = [], [], 0
+    handles, rejected = [], 0
     t0 = time.perf_counter()
     for i in range(n_requests):
         target = t0 + i * period
@@ -95,15 +103,10 @@ def run_open(svc, pool, algs, n_requests, rate):
         if target > now:
             time.sleep(target - now)
         try:
-            submit_ts.append(time.perf_counter())
             handles.append(svc.submit(pool[i % len(pool)], algs))
         except ServiceOverloaded:
-            submit_ts.pop()
             rejected += 1
-    latencies = []
-    for ts, h in zip(submit_ts, handles):
-        h.result(60)
-        latencies.append(time.perf_counter() - ts)
+    latencies = [h.result(60).timing["latency_s"] for h in handles]
     return time.perf_counter() - t0, latencies, rejected
 
 

@@ -159,17 +159,27 @@ class ResponseHandle:
 
     def result(self, timeout: Optional[float] = None) -> ExtractResponse:
         """Assemble the response; ``timeout`` is a total deadline across
-        every tile of the request, not per tile."""
+        every tile of the request, not per tile.
+
+        ``timing["completed_at"]`` is when the request's *work* finished —
+        the latest device-batch completion stamp across its tiles (a
+        fully-cached request completes at submit time) — NOT when
+        ``result()`` happened to be called.  An open-loop client that
+        drains handles in submit order therefore measures true service
+        latency, not its own drain position (``latency_s`` used to be
+        inflated by exactly that drain wait)."""
         deadline = None if timeout is None else time.monotonic() + timeout
         per_tile: List[Dict[str, Dict[str, np.ndarray]]] = []
         batch_sizes: List[int] = []
+        completed_at = self._enqueued_at       # fully-cached: no device wait
         for p in self._parts:
             if p.future is None:
                 per_tile.append(dict(p.cached))
                 continue
             rem = None if deadline is None else deadline - time.monotonic()
-            computed, batch_size = p.future.result(rem)
+            computed, batch_size, part_done = p.future.result(rem)
             batch_sizes.append(batch_size)
+            completed_at = max(completed_at, part_done)
             if not p.cached:
                 per_tile.append(computed)
                 continue
@@ -184,13 +194,13 @@ class ResponseHandle:
                        for alg in self.algorithms}
         cached = {alg: sum(1.0 for p in self._parts if alg not in p.missing)
                   / len(self._parts) for alg in self.algorithms}
-        now = time.time()
         return ExtractResponse(
             request_id=self.request_id, algorithms=self.algorithms,
             results=results, n_tiles=len(self._parts), bucket=self._bucket,
             cached=cached,
-            timing={"enqueued_at": self._enqueued_at, "completed_at": now,
-                    "latency_s": now - self._enqueued_at,
+            timing={"enqueued_at": self._enqueued_at,
+                    "completed_at": completed_at,
+                    "latency_s": completed_at - self._enqueued_at,
                     "batch_sizes": tuple(batch_sizes)})
 
 
@@ -352,7 +362,15 @@ class FeatureService:
             for v in res.values():
                 v.setflags(write=False)            # responses are read-only
         caching = self.cache.capacity > 0
+        # service-time stamp: the device step for this batch is done NOW.
+        # It rides in the future payload so ResponseHandle can report the
+        # completion time of the work itself — result() may be called
+        # arbitrarily late (an open-loop client draining handles in submit
+        # order), and stamping at assembly would bill that drain wait as
+        # service latency.
+        completed_at = time.time()
         for i, it in enumerate(items):
+            it.completed_at = completed_at
             res = {}
             for alg in algorithms:
                 sliced = {k: v[i] for k, v in out[alg].items()}
@@ -363,7 +381,7 @@ class FeatureService:
                         (it.digest, alg, it.cfg_digest), sliced)
                 res[alg] = sliced
             if not it.future.cancelled():
-                it.future.set_result((res, it.batch_size))
+                it.future.set_result((res, it.batch_size, completed_at))
 
     # -- ops -----------------------------------------------------------------
     def warmup(self, algorithm_sets: Sequence,

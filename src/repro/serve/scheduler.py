@@ -52,6 +52,7 @@ class WorkItem:
     future: Future
     enqueued_at: float = 0.0
     batch_size: int = 0              # filled by the runner
+    completed_at: float = 0.0        # wall clock at batch completion (runner)
 
     @property
     def group_key(self) -> tuple:

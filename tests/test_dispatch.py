@@ -1,0 +1,116 @@
+"""Benchmark-gated matcher dispatch (`kernels/dispatch.py`): candidate
+eligibility, shape bucketing, measure-once semantics, and disk-cache
+persistence across processes (simulated by clearing the in-memory memo)."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.kernels import dispatch, ops
+
+
+@pytest.fixture
+def fresh_cache(tmp_path, monkeypatch):
+    """Point the dispatch cache at an empty per-test file and drop the
+    in-process memo, so tests never see (or pollute) the user's cache."""
+    path = str(tmp_path / "dispatch.json")
+    monkeypatch.setenv(dispatch.CACHE_ENV, path)
+    dispatch.clear_memory_cache()
+    yield path
+    dispatch.clear_memory_cache()
+
+
+def test_shape_bucket_rounds_up_pow2_keeps_d_exact():
+    assert dispatch.shape_bucket(100, 3000, 128) == (128, 4096, 128)
+    assert dispatch.shape_bucket(128, 4096, 8) == (128, 4096, 8)
+    assert dispatch.shape_bucket(1, 1, 64) == (1, 1, 64)
+    # same bucket -> same key; different d -> different key
+    k1 = dispatch.bucket_key("l2", "cpu", 100, 3000, 128)
+    assert k1 == dispatch.bucket_key("l2", "cpu", 128, 4096, 128)
+    assert k1 != dispatch.bucket_key("l2", "cpu", 128, 4096, 64)
+
+
+def test_candidate_paths_eligibility():
+    # CPU: never a pallas candidate (interpret mode is not a perf path)
+    assert dispatch.candidate_paths("l2", "cpu", 4096, 128) == \
+        dispatch.JNP_PATHS
+    # big DB drops the materializing candidates everywhere
+    big = dispatch.FULL_MAX_ROWS + 1
+    assert dispatch.candidate_paths("l2", "cpu", big, 128) == ("jnp_stream",)
+    assert dispatch.candidate_paths("hamming", "tpu", big, 8) == \
+        ("jnp_stream", "pallas_stream")
+    # TPU small DB: all four compete
+    assert dispatch.candidate_paths("hamming", "tpu", 4096, 8) == \
+        dispatch.MATCH_PATHS
+    # use_pallas restricts the pool
+    assert dispatch.candidate_paths("l2", "cpu", 4096, 128,
+                                    use_pallas=False) == dispatch.JNP_PATHS
+    assert dispatch.candidate_paths("hamming", "tpu", 4096, 8,
+                                    use_pallas=True) == dispatch.PALLAS_PATHS
+
+
+def test_choose_path_measures_once_then_memoizes(fresh_cache):
+    before = dispatch.measure_count
+    p1 = dispatch.choose_path("l2", 64, 2048, 64)
+    measured = dispatch.measure_count - before
+    assert measured == len(dispatch.candidate_paths(
+        "l2", "cpu", 2048, 64))              # one probe per candidate
+    assert p1 in dispatch.JNP_PATHS
+    # same bucket again (even a different shape inside it): no re-measure
+    p2 = dispatch.choose_path("l2", 33, 1100, 64)
+    assert p2 == p1
+    assert dispatch.measure_count == before + measured
+
+
+def test_choose_path_single_candidate_skips_measurement(fresh_cache):
+    before = dispatch.measure_count
+    p = dispatch.choose_path("l2", 64, dispatch.FULL_MAX_ROWS + 1, 64)
+    assert p == "jnp_stream"
+    assert dispatch.measure_count == before   # nothing to race: no probe
+
+
+def test_disk_cache_survives_memory_clear(fresh_cache):
+    before = dispatch.measure_count
+    p1 = dispatch.choose_path("hamming", 64, 1024, 8)
+    measured = dispatch.measure_count - before
+    assert measured > 0
+    assert os.path.exists(fresh_cache)
+    entry = json.load(open(fresh_cache))
+    [(key, val)] = entry.items()
+    assert val["path"] == p1 and "us" in val
+    # a "new process": empty memo, same disk file -> disk hit, no probe
+    dispatch.clear_memory_cache()
+    p2 = dispatch.choose_path("hamming", 64, 1024, 8)
+    assert p2 == p1
+    assert dispatch.measure_count == before + measured
+
+
+def test_corrupt_disk_cache_remeasures(fresh_cache):
+    with open(fresh_cache, "w") as f:
+        f.write("{not json")
+    before = dispatch.measure_count
+    p = dispatch.choose_path("l2", 32, 512, 32)
+    assert p in dispatch.JNP_PATHS
+    assert dispatch.measure_count > before    # fell through to measurement
+
+
+def test_match_best2_uses_dispatch_and_probe_caps(fresh_cache):
+    """End to end: a default (use_pallas=None) call triggers exactly one
+    measurement round; probes never materialize beyond the caps."""
+    rng = np.random.RandomState(0)
+    q = rng.randn(40, 32).astype(np.float32)
+    db = rng.randn(900, 32).astype(np.float32)
+    before = dispatch.measure_count
+    out1 = ops.match_best2(q, db, metric="l2")
+    assert dispatch.measure_count > before
+    after = dispatch.measure_count
+    out2 = ops.match_best2(q, db, metric="l2")
+    assert dispatch.measure_count == after
+    for a, b in zip(out1, out2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # cap check is pure arithmetic on the probe shape helper
+    us = dispatch.measure_path("jnp_stream", "l2",
+                               dispatch.PROBE_NQ_CAP * 4,
+                               dispatch.PROBE_NK_CAP * 4, 16)
+    assert us > 0.0

@@ -1,0 +1,179 @@
+"""Approximate pre-filter indexes (`kernels/index.py`): exact re-rank
+semantics (dedup, masking, tie-breaks), LSH/k-means recall on matching
+workloads, and the `match_pair(mode="approx")` wiring — including the
+ISSUE gate: LSH recall >= 0.95 at default probes on synthetic_scene
+pairs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import matching
+from repro.kernels import index as kindex
+from repro.kernels import ref
+
+
+def packed(n, seed, words=8):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randint(0, 2 ** 32, size=(n, words),
+                                   dtype=np.uint64).astype(np.uint32))
+
+
+# ---- exact re-rank ---------------------------------------------------------
+
+def test_rerank_duplicate_candidate_cannot_fake_second_best():
+    """The same row surfaced by two tables must not count twice: a
+    duplicated best masquerading as second-best would zero the Lowe
+    ratio and reject every real match."""
+    db = packed(8, 0)
+    q = db[2:3]                            # query equals db row 2: dist 0
+    valid = jnp.ones(8, jnp.bool_)
+    cand = jnp.asarray([[2, 2, 2, 5, -1, -1]], jnp.int32)
+    best, second, idx = kindex.rerank_exact(q, db, valid, cand,
+                                            metric="hamming")
+    assert int(best[0]) == 0 and int(idx[0]) == 2
+    # second-best is row 5's real distance, not the duplicated zero
+    d5 = int(ref.match_best2(q, db[5:6], jnp.ones(1, jnp.bool_),
+                             metric="hamming")[0][0])
+    assert int(second[0]) == d5 > 0
+
+
+def test_rerank_matches_oracle_on_full_candidate_set():
+    """Candidates = every row -> rerank must equal the exact matcher,
+    including db_valid masking and smallest-index tie-breaks."""
+    nq, nk = 33, 210
+    q, db = packed(nq, 1), packed(nk, 2)
+    valid = jnp.asarray(np.random.RandomState(3).rand(nk) > 0.2)
+    cand = jnp.tile(jnp.arange(nk, dtype=jnp.int32)[None], (nq, 1))
+    got = kindex.rerank_exact(q, db, valid, cand, metric="hamming")
+    want = ref.match_best2(q, db, valid, metric="hamming")
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_rerank_empty_candidate_rows_yield_big():
+    db = packed(4, 0)
+    q = packed(2, 1)
+    cand = jnp.full((2, 5), -1, jnp.int32)
+    best, second, idx = kindex.rerank_exact(q, db, jnp.ones(4, jnp.bool_),
+                                            cand, metric="hamming")
+    assert (np.asarray(best) >= 1 << 30).all()
+    assert (np.asarray(second) >= 1 << 30).all()
+
+
+# ---- index construction ----------------------------------------------------
+
+def test_build_index_factory_routes_by_dtype():
+    assert isinstance(kindex.build_index(np.asarray(packed(64, 0))),
+                      kindex.LshIndex)
+    assert isinstance(
+        kindex.build_index(np.random.RandomState(0).randn(64, 16)
+                           .astype(np.float32)), kindex.KMeansIndex)
+    with pytest.raises(ValueError, match="unknown metric"):
+        kindex.build_index(np.zeros((4, 4), np.float32), metric="cosine")
+    with pytest.raises(TypeError, match="bit-packed"):
+        kindex.LshIndex(np.zeros((4, 4), np.float32))
+
+
+def test_lsh_invalid_rows_never_surface():
+    db = packed(128, 0)
+    valid = np.zeros(128, bool)
+    valid[:64] = True
+    idx = kindex.LshIndex(np.asarray(db), valid, seed=1)
+    cand = np.asarray(idx.candidates(db))      # query with every row
+    surfaced = np.unique(cand[cand >= 0])
+    assert surfaced.size and (surfaced < 64).all()
+
+
+def test_kmeans_lists_are_disjoint_and_complete():
+    rng = np.random.RandomState(0)
+    db = rng.randn(300, 16).astype(np.float32)
+    idx = kindex.KMeansIndex(db, n_clusters=8, bucket_cap=300)
+    lists = np.asarray(idx._lists)
+    rows = lists[lists >= 0]
+    assert idx.overflow == 0
+    assert len(rows) == 300 and len(np.unique(rows)) == 300
+
+
+def test_lsh_self_query_recall_with_noise():
+    """Near-duplicate queries (3% flipped bits — far tighter than the
+    matching ratio test needs) find their counterpart at default knobs."""
+    rng = np.random.RandomState(4)
+    bits = rng.randint(0, 2, size=(400, 256)).astype(np.uint8)
+    noisy = bits ^ (rng.rand(400, 256) < 0.03)
+
+    def pack_bits(b):
+        w = b.reshape(b.shape[0], -1, 32).astype(np.uint32)
+        return (w << np.arange(32, dtype=np.uint32)).sum(-1).astype(np.uint32)
+
+    db = pack_bits(bits)
+    q = jnp.asarray(pack_bits(noisy.astype(np.uint8)))
+    idx = kindex.LshIndex(db, seed=2)
+    _, _, got = idx.search(q)
+    recall = float((np.asarray(got) == np.arange(400)).mean())
+    assert recall >= 0.95, recall
+
+
+def test_kmeans_self_query_recall_with_noise():
+    rng = np.random.RandomState(5)
+    base = rng.randn(400, 32).astype(np.float32)
+    idx = kindex.KMeansIndex(base, seed=3)
+    q = jnp.asarray(base + 0.05 * rng.randn(400, 32).astype(np.float32))
+    _, _, got = idx.search(q)
+    recall = float((np.asarray(got) == np.arange(400)).mean())
+    assert recall >= 0.95, recall
+
+
+# ---- match_pair(mode="approx") on real extracted descriptors ---------------
+
+def _scene_features(scene, alg):
+    from repro.configs.difet_paper import DifetConfig
+    from repro.core.bundle import tile_scene
+    from repro.core.engine import extract_features
+    cfg = DifetConfig(tile=64, halo=24, max_keypoints_per_tile=256,
+                      fast_threshold=0.08)
+    b = tile_scene(scene, cfg)
+    r = jax.jit(lambda t, h: extract_features(t, h, alg, cfg))(
+        b.tiles, b.headers)
+    return (jnp.asarray(r["top_desc"]), jnp.asarray(r["top_valid"]))
+
+
+def test_lsh_recall_on_synthetic_scene_pair():
+    """The ISSUE gate: approx (multi-probe LSH) keeps >= 0.95 of the exact
+    pipeline's accepted matches at default probes on an overlapping
+    synthetic_scene pair."""
+    from repro.data.landsat import synthetic_scene
+    base = synthetic_scene(200, 320, seed=9, density=4.0)
+    da, va = _scene_features(base[:, :220], "brief")
+    db_, vb = _scene_features(base[:, 100:], "brief")
+    exact = matching.match_pair(da, va, db_, vb)
+    approx = matching.match_pair(da, va, db_, vb, mode="approx")
+    acc = np.asarray(exact.ok)
+    assert acc.any(), "no exact-accepted matches — scene too sparse"
+    agree = np.asarray(approx.idx_b)[acc] == np.asarray(exact.idx_b)[acc]
+    assert float(agree.mean()) >= 0.95, float(agree.mean())
+    # approx-accepted matches carry true (re-ranked) distances
+    both = acc & np.asarray(approx.ok) \
+        & (np.asarray(approx.idx_b) == np.asarray(exact.idx_b))
+    assert both.any()
+    np.testing.assert_array_equal(np.asarray(approx.dist)[both],
+                                  np.asarray(exact.dist)[both])
+
+
+def test_match_pair_approx_accepts_prebuilt_indexes_and_probe_knob():
+    rng = np.random.RandomState(6)
+    base = rng.randn(200, 32).astype(np.float32)
+    da = jnp.asarray(base)
+    db_ = jnp.asarray(base + 0.03 * rng.randn(200, 32).astype(np.float32))
+    va = vb = jnp.ones(200, bool)
+    ia = kindex.build_index(np.asarray(da))
+    ib = kindex.build_index(np.asarray(db_))
+    m1 = matching.match_pair(da, va, db_, vb, mode="approx",
+                             index_a=ia, index_b=ib)
+    m2 = matching.match_pair(da, va, db_, vb, mode="approx",
+                             index_a=ia, index_b=ib,
+                             probes=ib.probes)
+    np.testing.assert_array_equal(np.asarray(m1.idx_b), np.asarray(m2.idx_b))
+    assert np.asarray(m1.ok).mean() > 0.9
+    with pytest.raises(ValueError, match="unknown mode"):
+        matching.match_pair(da, va, db_, vb, mode="fuzzy")

@@ -144,6 +144,89 @@ def test_register_pair_vmappable():
 
 
 # ---------------------------------------------------------------------------
+# streaming-DB paths: parity at sizes straddling the old VMEM gate
+# ---------------------------------------------------------------------------
+
+# L2 at d=128 stops fitting the 12 MiB resident-kernel budget near ~21k
+# rows; these sizes straddle that boundary (and 24*2048+1 exceeds it with
+# a 1-row non-multiple-of-chunk tail)
+STRADDLE_NK = [16384, 20480, 24576, 24 * 2048 + 1]
+
+
+def test_straddle_sizes_actually_straddle_the_gate():
+    from repro.kernels.ops import matcher_fits_vmem
+    fits = [matcher_fits_vmem(nk, 128, "l2") for nk in STRADDLE_NK]
+    assert fits[0] and not fits[-1], fits     # both sides represented
+
+
+@pytest.mark.parametrize("nk", STRADDLE_NK)
+def test_l2_stream_paths_parity_across_vmem_gate(nk):
+    """jnp_stream and the streaming Pallas kernel (interpret) agree with
+    the oracle at DB sizes the resident kernel can and cannot hold —
+    including a non-multiple-of-chunk tail — with db_valid masking."""
+    nq = 37
+    q, db, v = floats(nq, 0), floats(nk, 1), mask(nk, 2)
+    ob, os_, oi = ref.match_best2(q, db, v, metric="l2")
+    for path in ("jnp_stream", "pallas_stream"):
+        b, s, i = ops.match_best2(q, db, v, metric="l2", path=path,
+                                  interpret=True)
+        np.testing.assert_allclose(np.asarray(b), np.asarray(ob),
+                                   rtol=1e-5, atol=1e-4, err_msg=path)
+        np.testing.assert_allclose(np.asarray(s), np.asarray(os_),
+                                   rtol=1e-5, atol=1e-4, err_msg=path)
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(oi),
+                                      err_msg=path)
+
+
+def test_hamming_stream_kernel_bit_identical_with_tail():
+    """Streaming kernel with a non-multiple-of-kblock tail (pad rows are
+    masked out inside ops): integer distances leave no tolerance."""
+    nq, nk = 64, 3 * 512 + 129            # hamming kblock=512, ragged tail
+    q, db, v = packed(nq, 0), packed(nk, 1), mask(nk, 2)
+    o = ref.match_best2(q, db, v, metric="hamming")
+    got = ops.match_best2(q, db, v, metric="hamming", path="pallas_stream",
+                          interpret=True)
+    for a, b in zip(got, o):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_use_pallas_true_has_no_silent_fallback():
+    """use_pallas=True used to silently fall back to jnp beyond the VMEM
+    gate; now it must resolve to the streaming kernel instead."""
+    assert ops.match_path(64, 4096, 128, metric="l2",
+                          use_pallas=True) == "pallas_resident"
+    assert ops.match_path(64, STRADDLE_NK[-1], 128, metric="l2",
+                          use_pallas=True) == "pallas_stream"
+    # and a forced-kernel call above the gate still matches the oracle
+    nq, nk = 16, 24576
+    q, db, v = floats(nq, 0), floats(nk, 1), mask(nk, 2)
+    ob, _, oi = ref.match_best2(q, db, v, metric="l2")
+    b, _, i = ops.match_best2(q, db, v, metric="l2", use_pallas=True,
+                              interpret=True)
+    np.testing.assert_allclose(np.asarray(b), np.asarray(ob),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(oi))
+
+
+def test_blocked_oracle_equals_plain_oracle():
+    q, db, v = packed(23, 0), packed(1000, 1), mask(1000, 2)
+    plain = ref.match_best2(q, db, v, metric="hamming")
+    blocked = ref.match_best2_blocked(q, db, v, metric="hamming", block=300)
+    for a, b in zip(blocked, plain):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_match_best2_rejects_unknown_path_and_metric():
+    q, db = floats(4, 0), floats(8, 1)
+    with pytest.raises(ValueError, match="unknown path"):
+        ops.match_best2(q, db, metric="l2", path="bogus")
+    with pytest.raises(ValueError, match="unknown metric"):
+        ops.match_best2(q, db, metric="cosine")
+    with pytest.raises(TypeError, match="bit-packed"):
+        ops.match_best2(q, db, metric="hamming")
+
+
+# ---------------------------------------------------------------------------
 # partition invariance of matching (extends core/bundle.py's interior-
 # ownership guarantee to the new subsystem)
 # ---------------------------------------------------------------------------

@@ -271,6 +271,64 @@ def test_arrival_order_determinism():
         assert_results_equal(outcomes[0][i], outcomes[1][i])
 
 
+# ---- latency accounting -----------------------------------------------------
+
+def test_open_loop_latency_not_inflated_by_drain_order():
+    """Reported latency is the batch-completion stamp minus enqueue — not
+    when ``result()`` got around to being called.  An open-loop client
+    injects everything up front, waits out the whole run, then drains in
+    submit order; the first request's latency must reflect its (first,
+    fast) batch, not the drain delay."""
+    import time
+
+    svc = make_service(max_batch=1, cache_entries=0)
+    try:
+        svc.warmup([("harris",)])
+        delay = 0.08
+        orig = svc._run_batch
+
+        def slow(bucket, algs, items):        # fixed per-batch service time
+            time.sleep(delay)
+            orig(bucket, algs, items)
+
+        svc.scheduler._run_batch = slow
+        # inject faster than service: all 4 submitted before batch 1 ends
+        tiles = [synthetic_scene(32, 32, 400 + s) for s in range(4)]
+        submit_t0 = time.perf_counter()
+        handles = [svc.submit(t, ("harris",)) for t in tiles]
+        while not all(h.done() for h in handles):
+            time.sleep(0.01)
+        time.sleep(0.3)                       # the drain wait under test
+        lats = [h.result(60).timing["latency_s"] for h in handles]
+        drain_wall = time.perf_counter() - submit_t0
+        # every request completed long before result() was called...
+        assert drain_wall > 0.3
+        # ...and the first request's latency is ~one service time, far
+        # below the drain wall (pre-fix it equaled drain_wall)
+        assert lats[0] < 0.3 < drain_wall
+        # later queue positions waited behind earlier batches
+        assert lats[-1] >= lats[0]
+        for r in [h.result(60) for h in handles]:
+            assert r.timing["completed_at"] >= r.timing["enqueued_at"]
+    finally:
+        svc.close()
+
+
+def test_fully_cached_response_reports_zero_queue_latency():
+    """A request served entirely from the result cache never touched the
+    device; its completion stamp is its enqueue stamp."""
+    svc = make_service(max_batch=2, cache_entries=64)
+    try:
+        tile = synthetic_scene(32, 32, 900)
+        svc.extract(tile, ("harris",), timeout=60)
+        r = svc.extract(tile, ("harris",), timeout=60)
+        assert r.fully_cached
+        assert r.timing["completed_at"] == r.timing["enqueued_at"]
+        assert r.timing["latency_s"] == 0.0
+    finally:
+        svc.close()
+
+
 # ---- scheduler: backpressure + coalescing ----------------------------------
 
 def test_scheduler_backpressure():
@@ -337,7 +395,7 @@ def test_identical_tiles_at_different_positions_never_alias():
                                     block=True)
             res = dict(part.cached)
             if part.future is not None:
-                computed, _ = part.future.result(60)
+                computed, _, _ = part.future.result(60)
                 res.update(computed)
             return res["harris"]
 
