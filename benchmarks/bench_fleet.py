@@ -1,0 +1,265 @@
+"""Fleet-serving benchmark + gates: replica scaling, fleet-warmed cache,
+shed rate at rated load, and routed-vs-direct bit-parity.
+
+Four measurements on an in-process `serve/fleet.py::Fleet` replaying
+`serve/trace.py` traces:
+
+* **throughput scaling** — the same unique-tile closed-loop flood
+  (result cache disabled, so the win is honest routing + batching)
+  through a 1-replica and a 4-replica fleet.  This host has one CPU
+  core, so wall-clock cannot show parallel speedup; instead every
+  replica shares one ``step_lock`` serializing device steps and
+  accounts uncontended per-replica ``busy_s`` — fleet makespan is the
+  straggler's busy time, exactly the simulated-worker methodology of
+  ``benchmarks/table1_scalability.py``.  Deliverable (gated): makespan
+  speedup >= 2x at 4 replicas — a router that hotspots one replica
+  fails this even though total work is unchanged.
+* **fleet-warmed cache** — fleet A computes a hot-scene trace through a
+  shared ``DiskCacheTier``; a *fresh* fleet B (empty local LRUs, same
+  directory) must serve the replay >= 99% from cache with every hit
+  coming off disk — one fleet's work warms the next (gated).
+* **shed at rated load** — open-loop Poisson injection at 60% of the
+  measured 4-replica capacity; admission control must shed <= 1%
+  (gated) and the p99 latency is recorded.
+* **parity** — fleet-B responses (which round-tripped through the disk
+  tier) must be *bit-identical* to direct
+  ``core/engine.py::extract_features_multi`` on the same padded tiles
+  (gated; covers router, replica, and npz round trip in one check).
+
+Timing gates (speedup, shed) re-measure once before failing — CPU-quota
+noise on shared CI hosts; parity and cache gates never retry.
+
+    PYTHONPATH=src python -m benchmarks.run --quick       # CI entry
+    PYTHONPATH=src python -m benchmarks.bench_fleet       # standalone
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from repro.configs.difet_paper import DifetConfig
+from repro.serve import (Fleet, FleetConfig, RouterConfig, ServeConfig,
+                         Shed)
+from repro.serve.trace import TraceConfig, make_trace, scene_key, tile_pool
+
+ALGS = ("harris", "shi_tomasi")
+TILE, HALO, K = 32, 8, 32
+
+
+class FleetGateError(AssertionError):
+    """A fleet CI gate (scaling / cache / shed / parity) failed."""
+
+
+def _fleet(n: int, *, cache_entries: int, cache_dir=None,
+           step_lock=None, spill: int = 8,
+           max_global_pending: int = 4096) -> Fleet:
+    base = DifetConfig(tile=TILE, halo=HALO, max_keypoints_per_tile=K)
+    cfg = FleetConfig(
+        serve=ServeConfig(base=base, buckets=(TILE,), max_batch=8,
+                          max_batch_delay_s=0.02, max_pending=4096,
+                          cache_entries=cache_entries),
+        router=RouterConfig(max_global_pending=max_global_pending,
+                            spill_queue_threshold=spill),
+        initial_replicas=n, min_replicas=n, max_replicas=n,
+        warm_algorithm_sets=(ALGS,), cache_dir=cache_dir)
+    return Fleet(cfg, step_lock=step_lock)
+
+
+def _uniform_trace(n: int, seed: int = 0) -> TraceConfig:
+    """One distinct scene per request (hot set = everything => uniform):
+    no repeats, so a disabled cache measures pure routing + batching."""
+    return TraceConfig(n_requests=n, seed=seed, unique_scenes=n,
+                       hot_fraction=1.0, tile_sizes=(TILE,),
+                       algorithm_sets=(ALGS,))
+
+
+def _hot_trace(n: int, seed: int = 1) -> TraceConfig:
+    """Hot-scene skew (the cache regime): 70% of requests over 2 scenes."""
+    return TraceConfig(n_requests=n, seed=seed, unique_scenes=16,
+                       hot_fraction=0.125, hot_weight=0.7,
+                       tile_sizes=(TILE,), algorithm_sets=(ALGS,))
+
+
+def _flood(fleet: Fleet, trace, pool):
+    """Closed-loop flood: submit everything, then drain.  Returns
+    (wall_s, responses)."""
+    t0 = time.perf_counter()
+    handles = [fleet.submit(pool[ev.pool_key], ev.algorithms,
+                            tenant=ev.tenant, scene_key=scene_key(ev))
+               for ev in trace]
+    resps = [h.result(240) for h in handles]
+    return time.perf_counter() - t0, resps
+
+
+def _busy(fleet: Fleet):
+    """(total busy_s, straggler busy_s) across replicas."""
+    reps = fleet.stats()["replicas"].values()
+    busy = [r["busy_s"] for r in reps]
+    return sum(busy), max(busy)
+
+
+def _measure_scaling(n_requests: int):
+    """One r1-vs-r4 measurement; returns the row ingredients."""
+    tcfg = _uniform_trace(n_requests)
+    trace, pool = make_trace(tcfg), tile_pool(tcfg)
+    lock = threading.Lock()
+
+    f1 = _fleet(1, cache_entries=0, step_lock=lock)
+    wall1, _ = _flood(f1, trace, pool)
+    busy1, _ = _busy(f1)
+    f1.close()
+
+    f4 = _fleet(4, cache_entries=0, step_lock=lock)
+    wall4, _ = _flood(f4, trace, pool)
+    busy4_total, busy4_max = _busy(f4)
+    s4 = f4.stats()
+    f4.close()
+    speedup = busy1 / max(busy4_max, 1e-9)
+    return {"wall1": wall1, "wall4": wall4, "busy1": busy1,
+            "busy4_total": busy4_total, "busy4_max": busy4_max,
+            "speedup": speedup, "spill": s4["routed_spill"],
+            "affinity": s4["routed_affinity"]}
+
+
+def run(quick: bool = False, strict: bool = True):
+    import jax
+    from repro.core import engine
+
+    n_scale = 64 if quick else 160
+    n_hot = 48 if quick else 96
+    rows = []
+
+    # -- replica scaling (gated: makespan speedup >= 2x at 4 replicas) ------
+    m = _measure_scaling(n_scale)
+    if m["speedup"] < 2.0:                 # timing gate: one re-measure
+        m = _measure_scaling(n_scale)
+    scaling_ok = m["speedup"] >= 2.0
+    rows.append(("fleet/throughput_r1", m["wall1"] / n_scale * 1e6,
+                 f"req_per_s={n_scale / m['wall1']:.1f};"
+                 f"busy_s={m['busy1']:.3f}"))
+    rows.append(("fleet/throughput_r4", m["wall4"] / n_scale * 1e6,
+                 f"speedup_makespan={m['speedup']:.2f};"
+                 f"busy_max={m['busy4_max']:.3f};"
+                 f"busy_total={m['busy4_total']:.3f};"
+                 f"affinity={m['affinity']};spill={m['spill']}"))
+
+    # -- fleet-warmed cache: fresh replicas served from the shared tier -----
+    tcfg = _hot_trace(n_hot)
+    trace, pool = make_trace(tcfg), tile_pool(tcfg)
+    cache_dir = tempfile.mkdtemp(prefix="bench-fleet-cache-")
+    fa = _fleet(2, cache_entries=1024, cache_dir=cache_dir)
+    _flood(fa, trace, pool)                # fleet A computes + writes through
+    fa.close()
+    fb = _fleet(2, cache_entries=1024, cache_dir=cache_dir)   # empty LRUs
+    t_b, resps = _flood(fb, trace, pool)
+    cached_frac = np.mean([r.fully_cached for r in resps])
+    disk_hits = sum(r["cache"]["disk_hits"]
+                    for r in fb.stats()["replicas"].values())
+    rows.append(("fleet/warm_cache", t_b / n_hot * 1e6,
+                 f"cached_frac={cached_frac:.3f};disk_hits={disk_hits};"
+                 f"replay_req_per_s={n_hot / t_b:.1f}"))
+    cache_ok = cached_frac >= 0.99 and disk_hits > 0
+
+    # -- parity (gated, no retry): fleet-B responses vs direct engine -------
+    svc = next(iter(fb.router._slots.values())).service
+    bucket = svc.table.interiors[0]
+    direct_fn = jax.jit(functools.partial(
+        engine.extract_features_multi, algorithms=ALGS,
+        cfg=svc.table.cfg_for(bucket)))
+    n_check = 8 if quick else 16
+    mismatches = []
+    for i in range(min(n_check, len(trace))):
+        ev = trace[i]
+        tile, header = svc.table.pad_to_bucket(pool[ev.pool_key], bucket)
+        direct = direct_fn(tile[None], header[None])
+        served = resps[i].results
+        for alg in ALGS:
+            for key, v in direct[alg].items():
+                a, b = np.asarray(v), served[alg][key]
+                if a.shape != b.shape or not np.array_equal(a, b):
+                    mismatches.append(f"{i}/{alg}/{key}")
+    parity_ok = not mismatches
+    rows.append(("fleet/parity", 0.0,
+                 f"parity_allclose={parity_ok};"
+                 f"checked={n_check}x{len(ALGS)}alg;via=disk_tier"))
+    fb.close()
+
+    # -- shed at rated load (gated: <= 1% at 60% of measured capacity) ------
+    capacity = n_scale / m["wall4"]        # serialized-step capacity
+    rate = 0.6 * capacity
+    shed_rate, p99_ms, t_open = _shed_phase(n_hot, rate)
+    if shed_rate > 0.01:                   # timing gate: one re-measure
+        shed_rate, p99_ms, t_open = _shed_phase(n_hot, rate)
+    rows.append(("fleet/shed_rated", t_open / n_hot * 1e6,
+                 f"rate_req_per_s={rate:.1f};shed_rate={shed_rate:.4f};"
+                 f"p99_ms={p99_ms:.2f}"))
+    shed_ok = shed_rate <= 0.01
+
+    if strict:
+        if not scaling_ok:
+            raise FleetGateError(
+                f"4-replica makespan speedup {m['speedup']:.2f} < 2.0 "
+                f"(busy1={m['busy1']:.3f}s, straggler="
+                f"{m['busy4_max']:.3f}s)")
+        if not cache_ok:
+            raise FleetGateError(
+                f"fresh fleet not warmed by shared tier: cached_frac="
+                f"{cached_frac:.3f}, disk_hits={disk_hits}")
+        if not parity_ok:
+            raise FleetGateError(
+                f"routed results diverged from direct engine calls: "
+                f"{mismatches[:8]}")
+        if not shed_ok:
+            raise FleetGateError(
+                f"shed rate {shed_rate:.2%} > 1% at rated load "
+                f"{rate:.1f} req/s")
+    return rows
+
+
+def _shed_phase(n: int, rate: float):
+    """Open-loop Poisson injection at ``rate``; returns (shed_rate,
+    p99_ms, wall_s)."""
+    tcfg = dataclasses.replace(_hot_trace(n, seed=2), arrival="poisson",
+                               rate=rate)
+    trace, pool = make_trace(tcfg), tile_pool(tcfg)
+    fleet = _fleet(2, cache_entries=0, max_global_pending=4096)
+    handles, shed = [], 0
+    t0 = time.perf_counter()
+    for ev in trace:
+        target = t0 + ev.t
+        now = time.perf_counter()
+        if target > now:
+            time.sleep(target - now)
+        try:
+            handles.append(fleet.submit(pool[ev.pool_key], ev.algorithms,
+                                        scene_key=scene_key(ev)))
+        except Shed:
+            shed += 1
+    lat = np.asarray([h.result(240).timing["latency_s"] for h in handles])
+    wall = time.perf_counter() - t0
+    fleet.close()
+    p99 = float(np.percentile(lat, 99) * 1e3) if len(lat) else 0.0
+    return shed / len(trace), p99, wall
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    try:
+        for name, us, derived in run(args.quick, strict=True):
+            print(f"{name},{us:.1f},{derived}")
+    except FleetGateError as e:
+        print(f"fleet/GATE,0,ERROR={e}")
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

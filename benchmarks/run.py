@@ -136,6 +136,15 @@ def bench_serve(quick):
     return run(quick, strict=True)
 
 
+def bench_fleet(quick):
+    """Fleet serving: replica-scaling makespan (>= 2x at 4 replicas),
+    fleet-warmed shared cache tier, shed rate at rated load, and the
+    routed-vs-direct bit-parity gate (strict mode raises on any gate,
+    failing this section)."""
+    from benchmarks.bench_fleet import run
+    return run(quick, strict=True)
+
+
 def bench_lm_step(quick):
     from repro.configs import get_config
     from repro.models import build_model
@@ -187,7 +196,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     for section in (bench_table2, bench_table1, bench_kernels,
                     bench_scalespace, bench_matcher, bench_serve,
-                    bench_lm_step, bench_roofline):
+                    bench_fleet, bench_lm_step, bench_roofline):
         try:
             for name, us, derived in section(args.quick):
                 rows.append((name, us, derived))

@@ -32,7 +32,7 @@ import os
 import threading
 import time
 from pathlib import Path
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -139,6 +139,22 @@ class LeaseBoard:
                 path.unlink()
         except (OSError, ValueError):
             pass
+
+    def holder(self, item: str) -> Optional[Tuple[str, float]]:
+        """``(worker, age_s)`` of the current lease on ``item``, or None
+        if unleased (or the lease file is torn mid-write)."""
+        try:
+            lease = json.loads(self._path(item).read_text())
+            return (lease["worker"], time.time() - lease.get("t", 0.0))
+        except (OSError, ValueError, KeyError):
+            return None
+
+    def fresh(self, item: str) -> bool:
+        """Is ``item`` held by a lease younger than ``ttl_s``?  The
+        liveness predicate fleets use: a worker that stops heartbeating
+        (re-acquiring its own lease) goes stale after one TTL."""
+        h = self.holder(item)
+        return h is not None and h[1] < self.ttl_s
 
 
 class ManifestJob:

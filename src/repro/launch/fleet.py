@@ -1,0 +1,215 @@
+"""DIFET fleet driver: replica pool + router replaying a synthetic
+trace (`serve/trace.py`) — the multi-replica analogue of
+``launch/serve.py``.
+
+Open-loop injection at the trace's arrival offsets through the router:
+admission control sheds (typed: tenant quota vs fleet saturation), the
+consistent-hash ring routes hot scenes to their affinity replicas, and
+the shared disk cache tier turns cross-replica repeats into hits.
+``--autoscale`` runs the queue-driven autoscaler during the replay;
+``--kill-after N`` kills a replica after N accepted requests (chaos:
+the run must still complete every accepted request).
+
+    PYTHONPATH=src python -m repro.launch.fleet --replicas 2 --requests 128
+    PYTHONPATH=src python -m repro.launch.fleet --smoke      # CI gate
+"""
+from __future__ import annotations
+
+import argparse
+import tempfile
+import time
+
+import numpy as np
+
+from repro.configs.difet_paper import DifetConfig
+from repro.serve import (Fleet, FleetConfig, RouterConfig, ServeConfig,
+                         Shed)
+from repro.serve.trace import TraceConfig, make_trace, scene_key, tile_pool
+
+
+def build_fleet(args) -> Fleet:
+    halo = 8 if args.tile_size <= 32 else 16
+    base = DifetConfig(tile=args.tile_size, halo=halo,
+                       max_keypoints_per_tile=args.max_keypoints)
+    serve = ServeConfig(base=base, buckets=(args.tile_size,),
+                        max_batch=args.batch,
+                        max_batch_delay_s=args.delay_ms * 1e-3,
+                        max_pending=args.max_pending,
+                        cache_entries=args.cache_entries)
+    router = RouterConfig(max_global_pending=args.max_global_pending,
+                          spill_queue_threshold=args.spill_threshold,
+                          tenant_rate=args.tenant_rate,
+                          tenant_burst=args.tenant_burst)
+    cfg = FleetConfig(serve=serve, router=router,
+                      initial_replicas=args.replicas,
+                      min_replicas=max(1, args.replicas // 2),
+                      max_replicas=max(args.replicas, args.max_replicas),
+                      warm_algorithm_sets=(("harris",),
+                                           ("harris", "shi_tomasi")),
+                      cache_dir=args.cache_dir
+                      or tempfile.mkdtemp(prefix="difet-fleet-cache-"),
+                      lease_ttl_s=args.lease_ttl)
+    return Fleet(cfg)
+
+
+def trace_config(args) -> TraceConfig:
+    return TraceConfig(n_requests=args.requests, seed=args.seed,
+                       arrival=args.arrival, rate=args.rate,
+                       tile_sizes=(args.tile_size,),
+                       unique_scenes=args.unique_scenes,
+                       algorithm_sets=(("harris",),
+                                       ("harris", "shi_tomasi")),
+                       algorithm_weights=(0.7, 0.3),
+                       tenants=("tenant-a", "tenant-b"),
+                       tenant_weights=(0.75, 0.25))
+
+
+def replay(fleet, trace, pool, kill_after=0):
+    """Open-loop replay through the router.  Returns (wall, latencies,
+    shed_by_reason, n_killed_readmitted)."""
+    handles, sheds = [], {}
+    killed = False
+    readmitted = 0
+    t0 = time.perf_counter()
+    for i, ev in enumerate(trace):
+        target = t0 + ev.t
+        now = time.perf_counter()
+        if target > now:
+            time.sleep(target - now)
+        try:
+            handles.append(fleet.submit(pool[ev.pool_key], ev.algorithms,
+                                        tenant=ev.tenant,
+                                        scene_key=scene_key(ev)))
+        except Shed as s:
+            sheds[s.reason] = sheds.get(s.reason, 0) + 1
+        if kill_after and not killed and len(handles) >= kill_after:
+            victim = fleet.ready_replicas()[0]
+            readmitted = fleet.kill_replica(victim)
+            print(f"[chaos] killed {victim} after {len(handles)} accepted "
+                  f"({readmitted} re-admitted)")
+            killed = True
+    latencies = [h.result(120).timing["latency_s"] for h in handles]
+    return time.perf_counter() - t0, latencies, sheds, readmitted
+
+
+def report(label, wall, latencies, sheds, fleet):
+    lat = np.asarray(latencies)
+    s = fleet.stats()
+    served, shed_n = len(lat), sum(sheds.values())
+    print(f"[{label}] {served} served, {shed_n} shed in {wall:.2f}s "
+          f"-> {served / wall:.1f} req/s over "
+          f"{s['replica_count']} replica(s)")
+    if served:
+        print(f"  latency p50={np.percentile(lat, 50) * 1e3:.2f} ms  "
+              f"p99={np.percentile(lat, 99) * 1e3:.2f} ms")
+    print(f"  routing affinity={s['routed_affinity']} "
+          f"spill={s['routed_spill']} readmitted={s['readmitted']}")
+    print(f"  sheds={sheds}  tenants={s['tenants']}")
+    print(f"  cache hits={s['total_cache_hits']} "
+          f"misses={s['total_cache_misses']}  "
+          f"busy={s['total_busy_s']:.2f}s")
+    for name, r in sorted(s["replicas"].items()):
+        print(f"  {name}: submitted={r['submitted']} "
+              f"batches={r['batches']} occ={r['batch_occupancy']:.2f} "
+              f"p99q={r['p99_queue_ms']:.1f}ms state="
+              f"{s['states'].get(name, '?')}")
+    return s
+
+
+def smoke(args) -> int:
+    """CI smoke: 2 replicas, short trace with a mid-trace replica kill;
+    assert zero accepted-request loss, bounded shed rate, and bit-parity
+    with the direct (unrouted) engine.  Non-zero exit on failure."""
+    import functools
+    import jax
+    from repro.core import engine
+
+    args.replicas = 2
+    args.requests = max(32, min(args.requests, 48))
+    fleet = build_fleet(args)
+    tcfg = trace_config(args)
+    trace, pool = make_trace(tcfg), tile_pool(tcfg)
+    failures = []
+
+    wall, lat, sheds, _ = replay(fleet, trace, pool,
+                                 kill_after=args.requests // 2)
+    served, shed_n = len(lat), sum(sheds.values())
+    if served + shed_n != len(trace):
+        failures.append(f"lost requests: {served} served + {shed_n} shed "
+                        f"!= {len(trace)} injected")
+    if served < 0.9 * len(trace):
+        failures.append(f"shed rate {shed_n / len(trace):.2%} > 10%")
+
+    # parity: routed result == direct extract_features_multi, bit-identical
+    ev = trace[0]
+    svc = next(iter(fleet.router._slots.values())).service
+    bucket = svc.table.interiors[0]
+    tile, header = svc.table.pad_to_bucket(pool[ev.pool_key], bucket)
+    direct = jax.jit(functools.partial(
+        engine.extract_features_multi, algorithms=ev.algorithms,
+        cfg=svc.table.cfg_for(bucket)))(tile[None], header[None])
+    routed = fleet.extract(pool[ev.pool_key], ev.algorithms,
+                           scene_key=scene_key(ev), timeout=60).results
+    for alg in ev.algorithms:
+        for k, v in direct[alg].items():
+            a, b = np.asarray(v), routed[alg][k]
+            if a.shape != b.shape or not np.array_equal(a, b):
+                failures.append(f"parity mismatch {alg}/{k}")
+
+    report("fleet-smoke", wall, lat, sheds, fleet)
+    fleet.close()
+    if failures:
+        print("FLEET SMOKE FAILED:", "; ".join(failures))
+        return 1
+    print("fleet smoke ok")
+    return 0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--max-replicas", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=128)
+    ap.add_argument("--rate", type=float, default=200.0)
+    ap.add_argument("--arrival", choices=("uniform", "poisson", "burst"),
+                    default="burst")
+    ap.add_argument("--tile-size", type=int, default=32)
+    ap.add_argument("--unique-scenes", type=int, default=16)
+    ap.add_argument("--max-keypoints", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--delay-ms", type=float, default=2.0)
+    ap.add_argument("--max-pending", type=int, default=256)
+    ap.add_argument("--max-global-pending", type=int, default=1024)
+    ap.add_argument("--spill-threshold", type=int, default=16)
+    ap.add_argument("--tenant-rate", type=float, default=float("inf"))
+    ap.add_argument("--tenant-burst", type=float, default=64.0)
+    ap.add_argument("--cache-entries", type=int, default=1024)
+    ap.add_argument("--cache-dir", default=None,
+                    help="shared disk cache tier (temp dir by default)")
+    ap.add_argument("--lease-ttl", type=float, default=5.0)
+    ap.add_argument("--autoscale", action="store_true",
+                    help="run the queue-driven autoscaler during replay")
+    ap.add_argument("--kill-after", type=int, default=0,
+                    help="chaos: kill one replica after N accepted requests")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke mode: assertions + non-zero exit")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        raise SystemExit(smoke(args))
+
+    fleet = build_fleet(args)
+    if args.autoscale:
+        fleet.start_autoscaler()
+    tcfg = trace_config(args)
+    trace, pool = make_trace(tcfg), tile_pool(tcfg)
+    wall, lat, sheds, _ = replay(fleet, trace, pool,
+                                 kill_after=args.kill_after)
+    stats = report("fleet", wall, lat, sheds, fleet)
+    fleet.close()
+    return stats
+
+
+if __name__ == "__main__":
+    main()

@@ -1,18 +1,27 @@
 """DIFET serving driver: in-process feature service + synthetic load
 generator (the online analogue of ``launch/extract.py``'s batch job).
 
-Closed loop: ``--concurrency`` client threads each submit a request and
-wait for it — models downstream consumers like the stitching pipeline.
-Open loop: requests are injected at a fixed ``--rate`` regardless of
-completions — models public traffic; queue overflow is load-shed
-(:class:`ServiceOverloaded` counted as rejected, the backpressure knob).
+The workload itself — arrival process, hot-scene skew, tile/algorithm
+mix — comes from `serve/trace.py`, the same generator the fleet driver
+(`launch/fleet.py`) and fleet benchmark (`benchmarks/bench_fleet.py`)
+replay, so single-service and fleet numbers describe the same traffic.
 
-The tile pool has ``--unique-tiles`` distinct tiles cycled over
-``--requests`` requests, so repeats exercise the content-hash result
+Closed loop: ``--concurrency`` client threads each submit a request and
+wait for it — models downstream consumers like the stitching pipeline
+(arrival offsets ignored; the clients are completion-clocked).
+Open loop: requests are injected at the trace's arrival offsets
+regardless of completions — models public traffic; queue overflow is
+load-shed (:class:`ServiceOverloaded` counted as rejected, the
+backpressure knob).  ``--arrival burst`` replays Markov-modulated spikes
+instead of a fixed period.
+
+The trace cycles ``--unique-tiles`` distinct scenes over ``--requests``
+requests with hot-set skew, so repeats exercise the content-hash result
 cache exactly the way recurring LandSat granules would.
 
     PYTHONPATH=src python -m repro.launch.serve --requests 96 --batch 8
-    PYTHONPATH=src python -m repro.launch.serve --mode open --rate 500
+    PYTHONPATH=src python -m repro.launch.serve --mode open --rate 500 \
+        --arrival burst
     PYTHONPATH=src python -m repro.launch.serve --smoke      # CI gate
 """
 from __future__ import annotations
@@ -25,8 +34,8 @@ import numpy as np
 
 from repro.configs.difet_paper import DifetConfig
 from repro.core.engine import normalize_algorithms
-from repro.data.landsat import synthetic_scene
 from repro.serve import FeatureService, ServeConfig, ServiceOverloaded
+from repro.serve.trace import TraceConfig, make_trace, tile_pool
 
 
 def build_service(args) -> FeatureService:
@@ -41,15 +50,30 @@ def build_service(args) -> FeatureService:
     return FeatureService(cfg)
 
 
+def trace_config(args, algs) -> TraceConfig:
+    """Map the driver CLI onto one shared `serve/trace.py::TraceConfig`."""
+    return TraceConfig(n_requests=args.requests, seed=args.seed,
+                       arrival=args.arrival, rate=args.rate,
+                       tile_sizes=(args.tile_size,),
+                       unique_scenes=args.unique_tiles,
+                       algorithm_sets=(tuple(algs),))
+
+
 def make_pool(args):
-    return [synthetic_scene(args.tile_size, args.tile_size, args.seed + i)
-            for i in range(args.unique_tiles)]
+    """Tile list for the smoke path: the trace generator's pool, indexed
+    by scene (single tile size)."""
+    cfg = TraceConfig(n_requests=1, seed=args.seed,
+                      tile_sizes=(args.tile_size,),
+                      unique_scenes=args.unique_tiles)
+    tp = tile_pool(cfg)
+    return [tp[(s, args.tile_size)] for s in range(args.unique_tiles)]
 
 
-def run_closed(svc, pool, algs, n_requests, concurrency):
+def run_closed(svc, trace, pool, concurrency):
     """Closed-loop: each worker submits, waits, repeats.  A failed request
     fails the run — a load generator must not mistake a dying service for
     a fast one."""
+    n_requests = len(trace)
     latencies = [0.0] * n_requests
     it = iter(range(n_requests))
     lock = threading.Lock()
@@ -61,9 +85,10 @@ def run_closed(svc, pool, algs, n_requests, concurrency):
                 i = next(it, None)
             if i is None:
                 return
+            ev = trace[i]
             t0 = time.perf_counter()
             try:
-                svc.submit(pool[i % len(pool)], algs,
+                svc.submit(pool[ev.pool_key], ev.algorithms,
                            block=True).result(60)
             except Exception as e:  # noqa: BLE001 — surfaced after join
                 errors.append((i, e))
@@ -84,8 +109,9 @@ def run_closed(svc, pool, algs, n_requests, concurrency):
     return time.perf_counter() - t0, latencies, 0
 
 
-def run_open(svc, pool, algs, n_requests, rate):
-    """Open-loop: inject at a fixed rate; overload is shed, not queued.
+def run_open(svc, trace, pool):
+    """Open-loop: inject at the trace's arrival offsets; overload is
+    shed, not queued.
 
     Latency is the service's own completion stamp
     (``timing["latency_s"]``: batch completion minus enqueue), NOT the
@@ -94,16 +120,15 @@ def run_open(svc, pool, algs, n_requests, rate):
     position behind its predecessors to its reported latency (at
     injection rates above service rate, that inflated every percentile
     toward the full run length)."""
-    period = 1.0 / rate
     handles, rejected = [], 0
     t0 = time.perf_counter()
-    for i in range(n_requests):
-        target = t0 + i * period
+    for ev in trace:
+        target = t0 + ev.t
         now = time.perf_counter()
         if target > now:
             time.sleep(target - now)
         try:
-            handles.append(svc.submit(pool[i % len(pool)], algs))
+            handles.append(svc.submit(pool[ev.pool_key], ev.algorithms))
         except ServiceOverloaded:
             rejected += 1
     latencies = [h.result(60).timing["latency_s"] for h in handles]
@@ -190,10 +215,13 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=96)
     ap.add_argument("--concurrency", type=int, default=8)
     ap.add_argument("--rate", type=float, default=500.0,
-                    help="open-loop injection rate (req/s)")
+                    help="open-loop mean injection rate (req/s)")
+    ap.add_argument("--arrival", choices=("uniform", "poisson", "burst"),
+                    default="uniform",
+                    help="open-loop arrival process (serve/trace.py)")
     ap.add_argument("--tile-size", type=int, default=32)
     ap.add_argument("--unique-tiles", type=int, default=16,
-                    help="distinct tiles in the pool; repeats hit the cache")
+                    help="distinct scenes in the pool; repeats hit the cache")
     ap.add_argument("--max-keypoints", type=int, default=64)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--delay-ms", type=float, default=2.0)
@@ -214,12 +242,12 @@ def main(argv=None):
     svc = build_service(args)
     print(f"[serve] warmup: {svc.warmup([algs])} program(s) "
           f"(bucket {args.tile_size}, batch {args.batch})")
-    pool = make_pool(args)
+    tcfg = trace_config(args, algs)
+    trace, pool = make_trace(tcfg), tile_pool(tcfg)
     if args.mode == "closed":
-        wall, lat, rej = run_closed(svc, pool, algs, args.requests,
-                                    args.concurrency)
+        wall, lat, rej = run_closed(svc, trace, pool, args.concurrency)
     else:
-        wall, lat, rej = run_open(svc, pool, algs, args.requests, args.rate)
+        wall, lat, rej = run_open(svc, trace, pool)
     stats = report(args.mode, wall, lat, rej, svc)
     svc.close()
     return stats

@@ -3,12 +3,23 @@
 ``FeatureService`` is the facade: request/response model in ``api.py``,
 continuous-batching scheduler in ``scheduler.py``, shape buckets + the
 per-(bucket, algorithm-set) compile cache in ``buckets.py``, and the
-content-hash LRU result cache in ``cache.py``.  The LM-substrate decode
-helpers live in ``serve/lm.py``.
+content-hash result caches (in-process LRU + shared disk tier) in
+``cache.py``.  The fleet layer replicates the service: consistent-hash
+router with admission control in ``router.py``, replica pool + lifecycle
++ queue-driven autoscaling in ``fleet.py``, and the shared synthetic
+trace generator in ``trace.py``.  The LM-substrate decode helpers live
+in ``serve/lm.py``.
 """
 from repro.serve.api import (FeatureService, ServeConfig, ExtractResponse,  # noqa: F401
                              ResponseHandle, ServiceOverloaded, tile_digest,
                              config_digest, encode_tile, decode_tile)
 from repro.serve.buckets import BucketTable, CompileCache, warmup  # noqa: F401
-from repro.serve.cache import ResultCache  # noqa: F401
-from repro.serve.scheduler import BatchScheduler, WorkItem  # noqa: F401
+from repro.serve.cache import (ResultCache, DiskCacheTier,  # noqa: F401
+                               TieredResultCache)
+from repro.serve.fleet import Fleet, FleetConfig  # noqa: F401
+from repro.serve.router import (Router, RouterConfig, Shed, FleetHandle,  # noqa: F401
+                                HashRing, TokenBucket)
+from repro.serve.scheduler import (BatchScheduler, WorkItem, ServiceClosed,  # noqa: F401
+                                   ReplicaDied)
+from repro.serve.trace import (TraceConfig, TraceEvent, make_trace,  # noqa: F401
+                               tile_pool, scene_key)

@@ -37,6 +37,7 @@ import io
 import json
 import threading
 import time
+from concurrent.futures import InvalidStateError as futures_InvalidStateError
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
@@ -47,13 +48,13 @@ from repro.core.bundle import rgba_to_gray, tile_scene
 from repro.core.engine import normalize_algorithms
 from repro.core.job import DifetJob
 from repro.serve.buckets import BucketTable, CompileCache, warmup
-from repro.serve.cache import ResultCache
-from repro.serve.scheduler import (BatchScheduler, ServiceOverloaded,
-                                   WorkItem)
+from repro.serve.cache import ResultCache, TieredResultCache
+from repro.serve.scheduler import (BatchScheduler, ServiceClosed,
+                                   ServiceOverloaded, WorkItem)
 
 __all__ = ["ServeConfig", "FeatureService", "ExtractResponse",
-           "ResponseHandle", "ServiceOverloaded", "tile_digest",
-           "config_digest", "encode_tile", "decode_tile"]
+           "ResponseHandle", "ServiceClosed", "ServiceOverloaded",
+           "tile_digest", "config_digest", "encode_tile", "decode_tile"]
 
 
 # ---- wire helpers ----------------------------------------------------------
@@ -93,7 +94,10 @@ def config_digest(cfg: DifetConfig, use_pallas: bool = False) -> str:
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
     """Service knobs.  ``base`` is the extraction config; its ``tile``
-    field is replaced per shape bucket."""
+    field is replaced per shape bucket.  ``cache_dir`` (optional) backs
+    the in-memory LRU with a shared on-disk tier
+    (`serve/cache.py::TieredResultCache`) — fleet replicas pointing at the
+    same directory warm each other."""
     base: DifetConfig = DifetConfig(tile=64, halo=16,
                                     max_keypoints_per_tile=128)
     buckets: Tuple[int, ...] = (32, 64, 128, 256)
@@ -101,6 +105,7 @@ class ServeConfig:
     max_batch_delay_s: float = 0.002      # latency/throughput knob
     max_pending: int = 1024               # backpressure knob
     cache_entries: int = 4096             # 0 disables the result cache
+    cache_dir: Optional[str] = None       # shared disk tier (fleet mode)
     use_pallas: bool = False
 
 
@@ -210,16 +215,32 @@ class FeatureService:
     """In-process DIFET feature-extraction service (the unit a fleet of
     workers would replicate behind a load balancer)."""
 
-    def __init__(self, cfg: Optional[ServeConfig] = None):
+    def __init__(self, cfg: Optional[ServeConfig] = None, *,
+                 name: str = "difet-serve",
+                 step_lock: Optional[threading.Lock] = None):
         self.cfg = cfg or ServeConfig()
+        self.name = name
         self.table = BucketTable(self.cfg.buckets, self.cfg.base)
         self.compile_cache = CompileCache(self.table, self.cfg.max_batch,
                                           self.cfg.use_pallas)
-        self.cache = ResultCache(self.cfg.cache_entries)
+        if self.cfg.cache_dir:
+            self.cache = TieredResultCache(self.cfg.cache_entries,
+                                           self.cfg.cache_dir)
+        else:
+            self.cache = ResultCache(self.cfg.cache_entries)
+        # benchmark hook: a lock shared across replicas serializes device
+        # steps, so per-replica ``busy_s`` is uncontended wall time and a
+        # fleet makespan on a shared CI host is the straggler's busy time
+        # (the table1 simulated-worker idiom) — None in production
+        self._step_lock = step_lock
+        self.busy_s = 0.0                 # runner-thread-only accumulator
+        self.steps = 0
+        self.requests = 0                 # accepted submit() calls
+        self.shed = 0                     # submit() calls shed on overload
         self.scheduler = BatchScheduler(
             self._run_batch, max_batch=self.cfg.max_batch,
             max_batch_delay_s=self.cfg.max_batch_delay_s,
-            max_pending=self.cfg.max_pending)
+            max_pending=self.cfg.max_pending, name=name)
         self._lock = threading.Lock()
         self._inflight: Dict[tuple, object] = {}
         self._canvases: Dict[int, tuple] = {}
@@ -284,8 +305,16 @@ class FeatureService:
         # NOTE: a multi-tile submit hitting backpressure mid-loop raises
         # with its earlier tiles already queued; they complete into the
         # result cache, so a retry reuses rather than recomputes them
-        parts = [self._submit_tile(tile, header, bucket, canonical, cfg_dig,
-                                   block) for tile, header in tiles]
+        try:
+            parts = [self._submit_tile(tile, header, bucket, canonical,
+                                       cfg_dig, block)
+                     for tile, header in tiles]
+        except ServiceOverloaded:
+            with self._lock:
+                self.shed += 1
+            raise
+        with self._lock:
+            self.requests += 1
         return ResponseHandle(rid, algs, parts, bucket, enqueued_at)
 
     def _submit_tile(self, tile, header, bucket, algs, cfg_dig,
@@ -342,6 +371,13 @@ class FeatureService:
         """Scheduler runner: scatter items into the bucket's fixed-shape
         batch (padded rows carry the pad flag), run the compiled program,
         freeze + cache per-item results, resolve futures."""
+        if self._step_lock is not None:
+            with self._step_lock:
+                return self._run_batch_locked(bucket, algorithms, items)
+        return self._run_batch_locked(bucket, algorithms, items)
+
+    def _run_batch_locked(self, bucket, algorithms, items) -> None:
+        t_start = time.monotonic()
         # per-bucket scratch canvas, reused across steps (runner thread is
         # the only writer).  Rows beyond the batch keep stale-but-finite
         # tile data; their headers are re-marked pad, so the engine masks
@@ -369,8 +405,11 @@ class FeatureService:
         # order), and stamping at assembly would bill that drain wait as
         # service latency.
         completed_at = time.time()
+        now_mono = time.monotonic()
         for i, it in enumerate(items):
             it.completed_at = completed_at
+            self.scheduler.latency_samples.append(
+                now_mono - it.enqueued_at)
             res = {}
             for alg in algorithms:
                 sliced = {k: v[i] for k, v in out[alg].items()}
@@ -380,8 +419,13 @@ class FeatureService:
                     sliced = self.cache.put(
                         (it.digest, alg, it.cfg_digest), sliced)
                 res[alg] = sliced
-            if not it.future.cancelled():
-                it.future.set_result((res, it.batch_size, completed_at))
+            if not it.future.done():               # kill() may have failed it
+                try:
+                    it.future.set_result((res, it.batch_size, completed_at))
+                except futures_InvalidStateError:
+                    pass                           # lost the race to kill()
+        self.busy_s += time.monotonic() - t_start
+        self.steps += 1
 
     # -- ops -----------------------------------------------------------------
     def warmup(self, algorithm_sets: Sequence,
@@ -393,13 +437,44 @@ class FeatureService:
         return warmup(self.compile_cache, sets, buckets)
 
     def stats(self) -> Dict[str, object]:
-        """Operational counters: result-cache hits/misses/evictions,
-        scheduler queue depths and batch sizes, and the compiled
-        (bucket, algorithm-set) program inventory."""
-        return {"cache": self.cache.stats(),
-                "scheduler": self.scheduler.stats(),
+        """Operational counters, cheap enough for an autoscaler to poll:
+        nested result-cache / scheduler detail plus a flat per-replica
+        snapshot (``submitted``/``shed`` requests, cache hit/miss, batch
+        occupancy, p50/p99 queue latency, device busy seconds) that
+        `serve/router.py::Router.stats` aggregates across the fleet."""
+        sched = self.scheduler.stats()
+        cache = self.cache.stats()
+        return {"cache": cache,
+                "scheduler": sched,
                 "programs": self.compile_cache.programs,
-                "program_keys": self.compile_cache.keys()}
+                "program_keys": self.compile_cache.keys(),
+                # flat per-replica counters (the fleet aggregation surface)
+                "name": self.name,
+                "submitted": self.requests,
+                "shed": self.shed,
+                "cache_hits": cache["hits"],
+                "cache_misses": cache["misses"],
+                "queue_depth": sched["queue_depth"],
+                "batches": sched["batches"],
+                "batch_occupancy": sched["occupancy"],
+                "p50_queue_ms": sched["p50_queue_ms"],
+                "p99_queue_ms": sched["p99_queue_ms"],
+                "busy_s": self.busy_s,
+                "steps": self.steps}
+
+    def drain(self, timeout: Optional[float] = 30.0) -> None:
+        """Stop accepting work and process everything already queued:
+        new ``submit`` calls raise :class:`ServiceClosed`, every accepted
+        item's future resolves (zero dropped responses), then the runner
+        thread exits.  The drain half of the fleet's drain → retire
+        lifecycle (`serve/fleet.py`)."""
+        self.scheduler.stop(timeout)
+
+    def kill(self, exc: Optional[BaseException] = None) -> None:
+        """Chaos hook: crash the replica *without* draining — queued and
+        on-device items fail with :class:`serve.scheduler.ReplicaDied` so
+        a router can re-admit them (`serve/router.py::Router`)."""
+        self.scheduler.kill(exc)
 
     def close(self, timeout: Optional[float] = 30.0) -> None:
         """Drain and stop the scheduler runner thread (idempotent);

@@ -1,4 +1,5 @@
-"""Content-hash LRU result cache for the feature service.
+"""Content-hash result caches for the feature service: in-process LRU +
+a shared on-disk tier for fleets.
 
 LandSat tiles recur across scenes and across requests (overlapping scene
 footprints, re-submitted work, mosaics sharing source granules), and
@@ -18,11 +19,25 @@ waste.  The cache is keyed by ``(tile_digest, algorithm, config_digest)``
 Values are per-request feature dicts (numpy leaves) frozen read-only on
 insert: cache hits hand out the stored arrays without copying, and the
 freeze guarantees no consumer can corrupt a shared entry.
+
+Fleets layer the tiers (`TieredResultCache`): each replica keeps its own
+in-memory LRU, backed by one ``DiskCacheTier`` directory shared by every
+replica — a write-through on any replica warms the whole fleet, and a
+local miss that hits disk is promoted into the local LRU.  Disk entries
+are ``.npz`` files named by the sha256 of the cache key, written
+tmp-then-rename (the same atomicity `core/job.py` relies on), so
+concurrent replica writers never expose a torn entry, and the round trip
+is bit-exact (``np.savez`` preserves dtype/shape, 0-d leaves included).
 """
 from __future__ import annotations
 
+import hashlib
+import io
+import os
 import threading
+import zipfile
 from collections import OrderedDict
+from pathlib import Path
 from typing import Dict, Optional
 
 import numpy as np
@@ -101,3 +116,147 @@ class ResultCache:
                     "hits": self.hits, "misses": self.misses,
                     "evictions": self.evictions, "inserts": self.inserts,
                     "hit_rate": self.hit_rate}
+
+
+class DiskCacheTier:
+    """Shared on-disk result tier: one directory, one ``.npz`` per cache
+    key (filename = sha256 of the key tuple, two-level fan-out so huge
+    fleets don't make one giant directory).
+
+    Writes are tmp-then-atomic-rename with a per-writer tmp name, so any
+    number of replica processes/threads can write concurrently; a reader
+    either sees a complete entry or none.  A corrupt/truncated file (a
+    crashed writer on a non-atomic filesystem) reads as a miss and is
+    removed.  Values round-trip bit-exactly: dtype, shape and 0-d leaves
+    are preserved, and loaded arrays come back frozen read-only."""
+
+    def __init__(self, root):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.hits = 0
+        self.misses = 0
+        self.inserts = 0
+        self._lock = threading.Lock()
+
+    def path_for(self, key) -> Path:
+        """Deterministic entry path for a cache key (any tuple of
+        str/bytes-able parts)."""
+        h = hashlib.sha256(repr(key).encode()).hexdigest()
+        return self.root / h[:2] / f"{h[2:]}.npz"
+
+    def get(self, key) -> Optional[Dict[str, np.ndarray]]:
+        """Load + freeze the entry, or None (miss / torn entry)."""
+        path = self.path_for(key)
+        try:
+            raw = path.read_bytes()
+            with np.load(io.BytesIO(raw), allow_pickle=False) as z:
+                out = {}
+                for k in z.files:
+                    a = z[k]
+                    if k.endswith("__0d"):      # un-promote 0-d leaves
+                        k, a = k[:-4], a.reshape(())
+                    a.setflags(write=False)
+                    out[k] = a
+        except FileNotFoundError:
+            with self._lock:
+                self.misses += 1
+            return None
+        except (OSError, ValueError, KeyError, zipfile.BadZipFile):
+            try:
+                path.unlink()                   # torn entry: drop + miss
+            except OSError:
+                pass
+            with self._lock:
+                self.misses += 1
+            return None
+        with self._lock:
+            self.hits += 1
+        return out
+
+    def put(self, key, value: Dict[str, np.ndarray]) -> None:
+        """Write-through one frozen feature dict (atomic rename)."""
+        path = self.path_for(key)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        buf = io.BytesIO()
+        # savez silently promotes 0-d arrays on round trip via indexing
+        # conventions elsewhere; tag them so get() restores exact shape
+        np.savez(buf, **{(k + "__0d" if np.ndim(v) == 0 else k):
+                         np.asarray(v) for k, v in value.items()})
+        tmp = path.with_suffix(
+            f".tmp.{os.getpid()}.{threading.get_ident()}")
+        tmp.write_bytes(buf.getvalue())
+        tmp.replace(path)
+        with self._lock:
+            self.inserts += 1
+
+    def __len__(self) -> int:
+        return sum(1 for _ in self.root.glob("*/*.npz"))
+
+    def stats(self) -> Dict[str, float]:
+        with self._lock:
+            return {"hits": self.hits, "misses": self.misses,
+                    "inserts": self.inserts}
+
+
+class TieredResultCache:
+    """Per-replica LRU backed by a shared :class:`DiskCacheTier`.
+
+    ``get`` probes the local LRU first, then the disk tier (a disk hit is
+    promoted into the LRU so the replica's next probe is memory-speed);
+    ``put`` inserts locally and writes through to disk — so one replica's
+    computation warms every replica sharing the directory.  Duck-types
+    :class:`ResultCache` (``get``/``put``/``capacity``/``stats``…), so
+    `serve/api.py::FeatureService` uses either interchangeably."""
+
+    def __init__(self, capacity: int, root):
+        self.local = ResultCache(capacity)
+        self.disk = DiskCacheTier(root)
+
+    @property
+    def capacity(self) -> int:
+        return self.local.capacity
+
+    @property
+    def hits(self) -> int:
+        """Total hits across tiers (local + disk-promoted)."""
+        return self.local.hits + self.disk.hits
+
+    @property
+    def misses(self) -> int:
+        """True fleet-level misses: missed locally AND on disk."""
+        return self.disk.misses
+
+    def __len__(self) -> int:
+        return len(self.local)
+
+    def get(self, key) -> Optional[Dict[str, np.ndarray]]:
+        hit = self.local.get(key)
+        if hit is not None:
+            return hit
+        hit = self.disk.get(key)
+        if hit is not None:
+            return self.local.put(key, hit)     # promote (re-frozen copy)
+        return None
+
+    def put(self, key, value: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        frozen = self.local.put(key, value)
+        self.disk.put(key, frozen)
+        return frozen
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+    def keys(self):
+        return self.local.keys()
+
+    def stats(self) -> Dict[str, float]:
+        s = self.local.stats()
+        d = self.disk.stats()
+        s["local_misses"] = s["misses"]
+        s["misses"] = d["misses"]             # fleet-level miss definition
+        s["disk_hits"] = d["hits"]
+        s["disk_inserts"] = d["inserts"]
+        s["hit_rate"] = self.hit_rate
+        return s

@@ -1,0 +1,301 @@
+"""Replica pool + autoscaler: N ``FeatureService`` replicas behind one
+:class:`serve/router.py::Router`.
+
+This is the layer the ROADMAP calls "the fleet a load balancer would
+replicate": each replica is an independent `serve/api.py::FeatureService`
+(its own continuous-batching scheduler, compile cache, and local result
+LRU), all sharing one on-disk result tier (``cache_dir`` →
+`serve/cache.py::TieredResultCache`, so a computation on any replica
+warms every replica) and one scene registry (broadcast on
+``register_scene``).
+
+Replica lifecycle::
+
+    SPAWNING → WARMING → READY → DRAINING → RETIRED
+                   │        │
+                   │        └─ kill / stale lease → DEAD (chaos path)
+                   └─ warm-up pre-compiles every (bucket, algorithm-set)
+                      program (`serve/buckets.py::warmup` via
+                      ``FeatureService.warmup``) before the replica joins
+                      the ring — a new replica never serves a compile
+                      stall to live traffic.
+
+Liveness rides the elastic-job machinery from `core/job.py`: every
+replica holds a :class:`LeaseBoard` lease under its own name, refreshed
+by the fleet's maintenance tick *only while the replica's runner thread
+is alive* — a crashed runner stops refreshing, the lease goes stale, and
+the next tick declares the replica DEAD and re-admits its in-flight work
+through the router (`Router.readmit`).  ``kill_replica`` is the same
+path taken eagerly (chaos tests).
+
+Autoscaling is queue-driven: each ``autoscale_tick`` compares the
+fleet-wide pending depth per READY replica against high/low watermarks —
+scale *up* immediately (spawn + warm + join), scale *down* only after
+``scale_down_grace_ticks`` consecutive idle ticks (hysteresis), and only
+by *draining*: the replica leaves the ring, finishes its queue, retires
+with zero dropped responses.
+"""
+from __future__ import annotations
+
+import dataclasses
+import tempfile
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+from repro.core.job import LeaseBoard
+from repro.serve.api import FeatureService, ServeConfig
+from repro.serve.router import Router, RouterConfig
+
+__all__ = ["FleetConfig", "Fleet", "Replica",
+           "SPAWNING", "WARMING", "READY", "DRAINING", "RETIRED", "DEAD"]
+
+# replica lifecycle states
+SPAWNING = "spawning"
+WARMING = "warming"
+READY = "ready"
+DRAINING = "draining"
+RETIRED = "retired"
+DEAD = "dead"
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    """Fleet knobs.  ``serve`` configures every replica (its
+    ``cache_dir`` is overridden with the fleet's shared ``cache_dir``
+    when set); ``router`` configures admission + routing.
+
+    Autoscaling: scale up when fleet queue depth per READY replica
+    exceeds ``scale_up_queue_per_replica`` (and the pool is below
+    ``max_replicas``); scale down after ``scale_down_grace_ticks``
+    consecutive ticks below ``scale_down_queue_per_replica`` (and above
+    ``min_replicas``).  ``lease_ttl_s`` bounds crash-detection latency:
+    a replica whose runner died is declared DEAD once its lease is this
+    stale."""
+    serve: ServeConfig = ServeConfig()
+    router: RouterConfig = RouterConfig()
+    initial_replicas: int = 2
+    min_replicas: int = 1
+    max_replicas: int = 8
+    warm_algorithm_sets: Tuple[Tuple[str, ...], ...] = (("harris",),)
+    cache_dir: Optional[str] = None       # shared result tier (all replicas)
+    lease_dir: Optional[str] = None       # liveness leases (temp dir default)
+    lease_ttl_s: float = 5.0
+    scale_up_queue_per_replica: float = 16.0
+    scale_down_queue_per_replica: float = 2.0
+    scale_down_grace_ticks: int = 3
+    autoscale_interval_s: float = 0.5
+
+
+class Replica:
+    """One pool member: the service plus its lifecycle state."""
+
+    def __init__(self, name: str, service: FeatureService):
+        self.name = name
+        self.service = service
+        self.state = SPAWNING
+
+    def runner_alive(self) -> bool:
+        """Is the replica's scheduler runner thread still running?  The
+        signal the maintenance tick gates heartbeats on — a dead runner
+        stops heartbeating and the lease goes stale."""
+        return self.service.scheduler._thread.is_alive()
+
+
+class Fleet:
+    """The replica pool (see module docstring).  ``fleet.router`` is the
+    client-facing submit surface; the fleet itself manages membership."""
+
+    def __init__(self, cfg: Optional[FleetConfig] = None, *,
+                 step_lock: Optional[threading.Lock] = None):
+        self.cfg = cfg or FleetConfig()
+        self.router = Router(self.cfg.router)
+        lease_dir = self.cfg.lease_dir or tempfile.mkdtemp(
+            prefix="difet-fleet-leases-")
+        self.leases = LeaseBoard(lease_dir, ttl_s=self.cfg.lease_ttl_s)
+        self._step_lock = step_lock
+        self._lock = threading.RLock()
+        self.replicas: Dict[str, Replica] = {}
+        self._counter = 0
+        self._idle_ticks = 0
+        self._scenes: Dict[str, object] = {}
+        self._autoscaler: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        for _ in range(self.cfg.initial_replicas):
+            self.spawn_replica()
+
+    # ---- lifecycle ----------------------------------------------------------
+    def _serve_cfg(self) -> ServeConfig:
+        if self.cfg.cache_dir:
+            return dataclasses.replace(self.cfg.serve,
+                                       cache_dir=self.cfg.cache_dir)
+        return self.cfg.serve
+
+    def spawn_replica(self) -> str:
+        """SPAWNING → WARMING → READY: build a service, pre-compile its
+        programs, take a liveness lease, join the ring.  Returns the
+        replica name (``replica-N``)."""
+        with self._lock:
+            self._counter += 1
+            name = f"replica-{self._counter}"
+            svc = FeatureService(self._serve_cfg(), name=name,
+                                 step_lock=self._step_lock)
+            rep = Replica(name, svc)
+            self.replicas[name] = rep
+        rep.state = WARMING
+        svc.warmup(self.cfg.warm_algorithm_sets)
+        for scene_name, image in self._scenes.items():
+            svc.register_scene(scene_name, image)
+        self.leases.acquire(name, name)
+        rep.state = READY
+        self.router.add_replica(name, svc)
+        return name
+
+    def drain_replica(self, name: str, timeout: float = 60.0) -> None:
+        """READY → DRAINING → RETIRED: leave the ring, finish every queued
+        item (zero dropped responses — tested), release the lease."""
+        with self._lock:
+            rep = self.replicas.get(name)
+            if rep is None or rep.state not in (READY, DRAINING):
+                return
+            rep.state = DRAINING
+        self.router.set_accepting(name, False)
+        rep.service.drain(timeout)
+        self.router.remove_replica(name)
+        self.leases.release(name, name)
+        rep.state = RETIRED
+
+    def kill_replica(self, name: str) -> int:
+        """Chaos: crash a replica mid-flight.  Its queued + on-device
+        items fail with ``ReplicaDied`` and are immediately re-admitted to
+        the survivors; returns how many requests were re-admitted."""
+        with self._lock:
+            rep = self.replicas.get(name)
+            if rep is None or rep.state in (RETIRED, DEAD):
+                return 0
+            rep.state = DEAD
+        rep.service.kill()
+        self.leases.release(name, name)
+        self.router.remove_replica(name, died=True)
+        return self.router.readmitted
+
+    # ---- liveness + autoscaling ---------------------------------------------
+    def ready_replicas(self) -> Tuple[str, ...]:
+        """Names of replicas currently in the READY state."""
+        with self._lock:
+            return tuple(n for n, r in self.replicas.items()
+                         if r.state == READY)
+
+    def maintenance_tick(self) -> Sequence[str]:
+        """Heartbeat live replicas; declare DEAD (and re-admit the work
+        of) any READY replica whose runner died and lease went stale.
+        Returns the names declared dead this tick."""
+        died = []
+        with self._lock:
+            candidates = [(n, r) for n, r in self.replicas.items()
+                          if r.state in (READY, DRAINING)]
+        for name, rep in candidates:
+            if rep.runner_alive():
+                self.leases.acquire(name, name)      # refresh own lease
+            elif not self.leases.fresh(name):
+                with self._lock:
+                    if rep.state == DEAD:
+                        continue
+                    rep.state = DEAD
+                self.router.remove_replica(name, died=True)
+                self.leases.release(name, name)
+                died.append(name)
+        return died
+
+    def autoscale_tick(self) -> str:
+        """One scaling decision from live queue stats (pure policy — the
+        background loop and the tests both call this).  Returns the action
+        taken: ``"scale_up:<name>"``, ``"scale_down:<name>"``, or
+        ``"hold"``."""
+        ready = self.ready_replicas()
+        if not ready:
+            if len(self.replicas) < self.cfg.max_replicas:
+                return f"scale_up:{self.spawn_replica()}"
+            return "hold"
+        depth = self.router.total_pending()
+        per_replica = depth / len(ready)
+        if (per_replica > self.cfg.scale_up_queue_per_replica
+                and len(ready) < self.cfg.max_replicas):
+            self._idle_ticks = 0
+            return f"scale_up:{self.spawn_replica()}"
+        if per_replica < self.cfg.scale_down_queue_per_replica:
+            self._idle_ticks += 1
+            if (self._idle_ticks >= self.cfg.scale_down_grace_ticks
+                    and len(ready) > self.cfg.min_replicas):
+                self._idle_ticks = 0
+                # retire the replica with the shallowest queue (cheapest
+                # drain); ties break on name for determinism
+                name = min(ready, key=lambda n: (
+                    self.replicas[n].service.scheduler.queue_depth, n))
+                self.drain_replica(name)
+                return f"scale_down:{name}"
+        else:
+            self._idle_ticks = 0
+        return "hold"
+
+    def start_autoscaler(self) -> None:
+        """Run maintenance + autoscale ticks on a daemon thread every
+        ``autoscale_interval_s`` until ``close()``."""
+        if self._autoscaler is not None:
+            return
+
+        def loop():
+            while not self._stop.wait(self.cfg.autoscale_interval_s):
+                try:
+                    self.maintenance_tick()
+                    self.autoscale_tick()
+                except Exception:  # noqa: BLE001 — scaling must not crash serving
+                    pass
+
+        self._autoscaler = threading.Thread(
+            target=loop, daemon=True, name="difet-fleet-autoscaler")
+        self._autoscaler.start()
+
+    # ---- client surface -----------------------------------------------------
+    def submit(self, image, algorithms, tenant: str = "default",
+               scene_key: Optional[str] = None,
+               request_id: Optional[str] = None):
+        """Router passthrough (see `serve/router.py::Router.submit`)."""
+        return self.router.submit(image, algorithms, tenant=tenant,
+                                  scene_key=scene_key,
+                                  request_id=request_id)
+
+    def extract(self, image, algorithms, tenant: str = "default",
+                scene_key: Optional[str] = None,
+                timeout: Optional[float] = None):
+        """Synchronous convenience: submit + wait."""
+        return self.submit(image, algorithms, tenant=tenant,
+                           scene_key=scene_key).result(timeout)
+
+    def register_scene(self, name: str, image) -> None:
+        """Broadcast a scene id to every replica (current and future), so
+        ``submit(name, ...)`` works wherever the request routes."""
+        self._scenes[name] = image
+        with self._lock:
+            reps = list(self.replicas.values())
+        for rep in reps:
+            if rep.state in (READY, WARMING, DRAINING):
+                rep.service.register_scene(name, image)
+
+    def stats(self) -> Dict[str, object]:
+        """Router aggregate + per-replica lifecycle states."""
+        s = self.router.stats()
+        with self._lock:
+            s["states"] = {n: r.state for n, r in self.replicas.items()}
+        s["ready"] = sum(1 for v in s["states"].values() if v == READY)
+        return s
+
+    def close(self, timeout: float = 60.0) -> None:
+        """Shut the fleet down: stop the autoscaler, stop admitting, and
+        drain every replica (accepted work completes)."""
+        self._stop.set()
+        if self._autoscaler is not None:
+            self._autoscaler.join(self.cfg.autoscale_interval_s + 5.0)
+            self._autoscaler = None
+        self.router.close()
+        for name in list(self.replicas):
+            self.drain_replica(name, timeout)

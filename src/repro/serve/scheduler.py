@@ -27,7 +27,8 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
-from concurrent.futures import Future
+from collections import deque
+from concurrent.futures import Future, InvalidStateError
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -35,6 +36,20 @@ import numpy as np
 
 class ServiceOverloaded(RuntimeError):
     """Raised by ``submit`` when the pending queue is at ``max_pending``."""
+
+
+class ServiceClosed(RuntimeError):
+    """Raised by ``submit`` once the scheduler is stopping or stopped —
+    including for submitters already *blocked* on backpressure when
+    ``stop()``/``kill()`` arrives: shutdown wakes them and raises this
+    instead of leaving them parked on the condition variable."""
+
+
+class ReplicaDied(RuntimeError):
+    """Set on every unresolved future when a replica is ``kill()``-ed —
+    the fleet router catches it and re-admits the work elsewhere
+    (`serve/router.py`); extraction is deterministic, so re-execution is
+    bit-identical."""
 
 
 @dataclasses.dataclass
@@ -72,12 +87,17 @@ class BatchScheduler:
         self.max_pending = int(max_pending)
         self._cv = threading.Condition()
         self._pending: List[WorkItem] = []
+        self._active: List[WorkItem] = []   # the batch currently on-device
         self._seq = 0
         self._stopping = False
+        self._killed = False
         self.batches = 0
         self.items = 0
         self.rejected = 0
         self.batch_size_hist: Dict[int, int] = {}
+        # queue latency samples (enqueue → batch completion, seconds) —
+        # appended by the service runner, bounded so stats() stays cheap
+        self.latency_samples: "deque[float]" = deque(maxlen=4096)
         self._thread = threading.Thread(target=self._loop, daemon=True,
                                         name=name)
         self._thread.start()
@@ -88,6 +108,8 @@ class BatchScheduler:
                timeout: Optional[float] = None) -> Future:
         deadline = None if timeout is None else time.monotonic() + timeout
         with self._cv:
+            if self._stopping:
+                raise ServiceClosed("scheduler is stopped")
             while len(self._pending) >= self.max_pending:
                 if not block:
                     self.rejected += 1
@@ -99,8 +121,12 @@ class BatchScheduler:
                     self.rejected += 1
                     raise ServiceOverloaded("timed out waiting for queue room")
                 self._cv.wait(rem)
-            if self._stopping:
-                raise RuntimeError("scheduler is stopped")
+                # shutdown must wake blocked submitters: without this
+                # re-check a submitter parked on backpressure would hang
+                # across stop()/kill() (regression-tested)
+                if self._stopping:
+                    raise ServiceClosed("scheduler stopped while waiting "
+                                        "for queue room")
             item = WorkItem(seq=self._seq, tile=np.asarray(tile, np.float32),
                             header=np.asarray(header, np.int32),
                             bucket=int(bucket),
@@ -146,10 +172,13 @@ class BatchScheduler:
                 if not self._pending and self._stopping:
                     return
                 (bucket, algorithms), batch = self._take_batch()
+                if not batch:                  # kill() raced the take
+                    continue
                 self.batches += 1
                 self.items += len(batch)
                 self.batch_size_hist[len(batch)] = \
                     self.batch_size_hist.get(len(batch), 0) + 1
+                self._active = list(batch)
                 self._cv.notify_all()          # wake backpressure waiters
             for it in batch:
                 it.batch_size = len(batch)
@@ -158,21 +187,65 @@ class BatchScheduler:
             except BaseException as e:  # noqa: BLE001 — fail the batch, not the service
                 for it in batch:
                     if not it.future.done():
-                        it.future.set_exception(e)
+                        try:
+                            it.future.set_exception(e)
+                        except InvalidStateError:
+                            pass               # kill() won the race
+            finally:
+                with self._cv:
+                    self._active = []
+                    if self._killed:
+                        return
 
     def stop(self, timeout: Optional[float] = None):
-        """Drain the queue, then stop the runner thread."""
+        """Drain the queue, then stop the runner thread.  Submitters
+        blocked on backpressure are woken and raise :class:`ServiceClosed`
+        instead of hanging."""
         with self._cv:
             self._stopping = True
             self._cv.notify_all()
         self._thread.join(timeout)
 
-    def stats(self) -> Dict[str, object]:
+    def kill(self, exc: Optional[BaseException] = None):
+        """Crash the scheduler *without* draining (chaos path): every
+        pending and in-flight (on-device) item's future fails with ``exc``
+        (default :class:`ReplicaDied`) so a fleet router can re-admit the
+        work; blocked submitters wake with :class:`ServiceClosed`.  An
+        in-flight batch that completes concurrently wins the future race
+        benignly — extraction is deterministic, so either outcome carries
+        the same bits."""
+        exc = exc or ReplicaDied("replica killed")
         with self._cv:
-            return {"batches": self.batches, "items": self.items,
+            self._stopping = True
+            self._killed = True
+            victims = self._pending + self._active
+            self._pending = []
+            self._cv.notify_all()
+        for it in victims:
+            if not it.future.done():
+                try:
+                    it.future.set_exception(exc)
+                except InvalidStateError:
+                    pass                       # the batch finished first
+
+    def stats(self) -> Dict[str, object]:
+        """Counter snapshot: totals, queue depth, batch-size histogram /
+        mean occupancy, and p50/p99 queue latency (enqueue → batch
+        completion) over the most recent completions."""
+        with self._cv:
+            lat = np.asarray(self.latency_samples, np.float64)
+            snap = {"batches": self.batches, "items": self.items,
+                    "submitted": self._seq,
                     "rejected": self.rejected,
                     "queue_depth": len(self._pending),
+                    "inflight": len(self._active),
                     "batch_size_hist": dict(sorted(
                         self.batch_size_hist.items())),
                     "mean_batch": (self.items / self.batches
                                    if self.batches else 0.0)}
+        snap["occupancy"] = snap["mean_batch"] / self.max_batch
+        snap["p50_queue_ms"] = (float(np.percentile(lat, 50)) * 1e3
+                                if lat.size else 0.0)
+        snap["p99_queue_ms"] = (float(np.percentile(lat, 99)) * 1e3
+                                if lat.size else 0.0)
+        return snap

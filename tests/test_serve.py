@@ -2,6 +2,7 @@
 determinism (DESIGN.md §8)."""
 import functools
 import threading
+import time
 
 import numpy as np
 import pytest
@@ -14,8 +15,9 @@ from repro.core.bundle import tile_scene
 from repro.core.job import DifetJob
 from repro.data.landsat import synthetic_scene
 from repro.serve import (BatchScheduler, BucketTable, FeatureService,
-                         ResultCache, ServeConfig, ServiceOverloaded,
-                         config_digest, encode_tile, tile_digest)
+                         ResultCache, ServeConfig, ServiceClosed,
+                         ServiceOverloaded, config_digest, encode_tile,
+                         tile_digest)
 
 BASE = DifetConfig(tile=32, halo=8, max_keypoints_per_tile=16)
 ALGS = ("harris", "shi_tomasi")
@@ -410,5 +412,119 @@ def test_identical_tiles_at_different_positions_never_alias():
         np.testing.assert_array_equal(
             np.asarray(r1["top_xs"])[valid],
             np.asarray(r0["top_xs"])[valid] + 3 * t)
+    finally:
+        svc.close()
+
+
+# ---- shutdown + burst-overflow regressions (fleet PR satellites) -----------
+
+def test_stop_wakes_blocked_submitters():
+    """A submitter parked on backpressure must be woken by stop() and get
+    a clean ServiceClosed — not hang on the condition variable (the
+    busy-wait used to re-check only queue room, never closure)."""
+    release = threading.Event()
+
+    def runner(bucket, algs, items):
+        release.wait(30)
+        for it in items:
+            it.future.set_result("ok")
+
+    sched = BatchScheduler(runner, max_batch=1, max_batch_delay_s=0.0,
+                           max_pending=1)
+    tile = np.zeros((4, 4), np.float32)
+    header = np.zeros((6,), np.int32)
+    f1 = sched.submit(tile, header, 4, ("harris",))
+    deadline = time.monotonic() + 10
+    while sched.queue_depth and time.monotonic() < deadline:
+        time.sleep(0.001)                 # runner took f1 (blocked in step)
+    f2 = sched.submit(tile, header, 4, ("harris",))   # queue now full
+    woke = []
+
+    def blocked_submitter():
+        try:
+            sched.submit(tile, header, 4, ("harris",), block=True,
+                         timeout=30)
+        except ServiceClosed as e:
+            woke.append(e)
+
+    t = threading.Thread(target=blocked_submitter)
+    t.start()
+    time.sleep(0.1)                       # let it park on the cv
+    sched.stop(timeout=0.1)               # runner still blocked: just flag
+    t.join(5)
+    assert not t.is_alive(), "blocked submitter hung across stop()"
+    assert len(woke) == 1                 # clean typed wake-up
+    with pytest.raises(ServiceClosed):
+        sched.submit(tile, header, 4, ("harris",))    # post-stop submit
+    release.set()
+    assert f1.result(30) == "ok"          # accepted work still completes
+    assert f2.result(30) == "ok"
+    sched.stop(10)
+
+
+def test_burst_overflow_sheds_under_concurrent_submitters():
+    """A synchronized burst from many client threads against a tiny
+    pending bound: overflow is shed (counted per service), every accepted
+    request completes, and nothing is double-counted."""
+    base = DifetConfig(tile=32, halo=8, max_keypoints_per_tile=16)
+    step_lock = threading.Lock()
+    svc = FeatureService(ServeConfig(
+        base=base, buckets=(32,), max_batch=4, max_batch_delay_s=0.001,
+        max_pending=8, cache_entries=0), step_lock=step_lock)
+    try:
+        svc.warmup([("harris",)])
+        tiles = [synthetic_scene(32, 32, 500 + i) for i in range(48)]
+        handles, sheds, lock = [], [], threading.Lock()
+
+        def client(chunk):
+            for tile in chunk:
+                try:
+                    h = svc.submit(tile, ("harris",))
+                except ServiceOverloaded:
+                    with lock:
+                        sheds.append(1)
+                else:
+                    with lock:
+                        handles.append(h)
+
+        with step_lock:                   # device stalled: queue must fill
+            threads = [threading.Thread(target=client,
+                                        args=(tiles[i::8],))
+                       for i in range(8)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+        assert len(sheds) >= 1            # the burst overflowed the bound
+        assert len(handles) + len(sheds) == len(tiles)
+        assert svc.shed == len(sheds)
+        assert svc.requests == len(handles)
+        for h in handles:                 # accepted work all completes
+            r = h.result(60)
+            assert int(r.results["harris"]["total_count"]) >= 0
+    finally:
+        svc.close()
+
+
+def test_service_stats_flat_snapshot():
+    """The per-replica counters the fleet router aggregates: flat keys,
+    cheap to poll, consistent with the traffic just served."""
+    svc = make_service(max_batch=4, cache_entries=64)
+    try:
+        svc.warmup([("harris",)])
+        tile = synthetic_scene(32, 32, 907)
+        svc.submit(tile, ("harris",), block=True).result(60)
+        svc.submit(tile, ("harris",), block=True).result(60)   # cache hit
+        s = svc.stats()
+        for key in ("name", "submitted", "shed", "cache_hits",
+                    "cache_misses", "queue_depth", "batches",
+                    "batch_occupancy", "p50_queue_ms", "p99_queue_ms",
+                    "busy_s", "steps"):
+            assert key in s, key
+        assert s["submitted"] == 2 and s["shed"] == 0
+        assert s["cache_hits"] >= 1 and s["cache_misses"] >= 1
+        assert s["steps"] >= 1 and s["busy_s"] > 0.0
+        assert 0.0 < s["batch_occupancy"] <= 1.0
+        assert s["p99_queue_ms"] >= s["p50_queue_ms"] >= 0.0
     finally:
         svc.close()
