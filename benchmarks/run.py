@@ -216,12 +216,18 @@ def main() -> None:
                                  check=True).stdout.strip()
         except Exception:  # noqa: BLE001
             rev = "unknown"
+        from repro.obs import export as obs_export
         path = f"BENCH_{rev}.json"
         with open(path, "w") as f:
+            # observability payload rides along: the registry histograms
+            # and kernel-profile rows accumulated while the sections ran
+            # (dispatch decisions, cache hit mix, layer latency quantiles)
+            # give each benchmark row its provenance
             json.dump({"rev": rev, "quick": args.quick,
                        "rows": [{"name": n, "us_per_call": us,
-                                 "derived": d} for n, us, d in rows]},
-                      f, indent=1)
+                                 "derived": d} for n, us, d in rows],
+                       "observability": obs_export.metrics_payload()},
+                      f, indent=1, default=str)
         print(f"# wrote {path}")
     if failed:
         # a section crashed or a kernel-vs-oracle parity check came back

@@ -38,6 +38,7 @@ import numpy as np
 
 from repro.core.bundle import BundleStore, TileBundle
 from repro.core.engine import extract_features, extract_features_multi
+from repro.obs import metrics as obs_metrics
 
 
 @dataclasses.dataclass
@@ -126,9 +127,11 @@ class LeaseBoard:
                 if time.time() - lease.get("t", 0.0) < self.ttl_s:
                     return False                # live lease held elsewhere
             self._write(path, worker)           # stale/orphaned: steal
+            obs_metrics.registry().counter("difet.job.lease_steals").inc()
             return True
         with os.fdopen(fd, "w") as f:
             json.dump({"worker": worker, "t": time.time()}, f)
+        obs_metrics.registry().counter("difet.job.lease_acquires").inc()
         return True
 
     def release(self, item: str, worker: str) -> None:
@@ -201,6 +204,7 @@ class ManifestJob:
             f".tmp.{os.getpid()}.{threading.get_ident()}")
         tmp.write_text(manifest.to_json())
         tmp.replace(self.manifest_path)      # atomic manifest update
+        obs_metrics.registry().counter("difet.job.manifest_commits").inc()
 
     def _merge_done_from_disk(self) -> None:
         """OR the on-disk manifest's done map into memory (tolerates a

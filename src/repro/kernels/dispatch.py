@@ -53,6 +53,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import matcher as _matcher
+from repro.obs import metrics as obs_metrics
+from repro.obs import profile as obs_profile
 
 JNP_PATHS = ("jnp_full", "jnp_stream")
 PALLAS_PATHS = ("pallas_resident", "pallas_stream")
@@ -198,6 +200,7 @@ def measure_path(path: str, metric: str, nq: int, nk: int, d: int) -> float:
     """
     global measure_count
     measure_count += 1
+    obs_metrics.registry().counter("difet.kernel.dispatch_measures").inc()
     nq = min(nq, PROBE_NQ_CAP)
     nk = min(nk, PROBE_NK_CAP)
     box: Dict[str, object] = {}
@@ -252,7 +255,44 @@ def choose_path(metric: str, nq: int, nk: int, d: int, *,
     best = min(timings, key=timings.get)
     with _lock:
         _memory[key] = best
+    for c, us in timings.items():              # probe wall → kernel profile
+        obs_profile.record_call(f"dispatch:{metric}:{c}:q{qb}k{kb}d{db}",
+                                us * 1e-6)
+    # full provenance: enough to audit WHY this bucket routes where it
+    # does without re-measuring (launch/obs.py --explain-dispatch)
     _store_disk(key, {"path": best, "us": timings,
                       "probe": [min(qb, PROBE_NQ_CAP),
-                                min(kb, PROBE_NK_CAP), db]})
+                                min(kb, PROBE_NK_CAP), db],
+                      "metric": metric, "backend": backend,
+                      "bucket": [qb, kb, db],
+                      "candidates": sorted(cands)})
     return best
+
+
+def explain() -> Dict[str, dict]:
+    """Decoded view of the on-disk dispatch cache: per bucket key, the
+    winning path, its margin over the runner-up, and the full candidate
+    timing table (``launch/obs.py --explain-dispatch`` renders this).
+    Entries written before provenance fields existed decode with
+    ``metric``/``backend`` parsed from the key."""
+    out: Dict[str, dict] = {}
+    for key, entry in sorted(_load_disk().items()):
+        if not isinstance(entry, dict) or "path" not in entry:
+            continue
+        parts = key.split("|")
+        row = {"path": entry["path"],
+               "metric": entry.get("metric", parts[0]),
+               "backend": entry.get("backend",
+                                    parts[1] if len(parts) > 1 else "?"),
+               "bucket": entry.get("bucket"),
+               "probe": entry.get("probe"),
+               "candidates": entry.get("candidates",
+                                       sorted(entry.get("us", {}))),
+               "us": dict(entry.get("us", {}))}
+        us = row["us"]
+        if len(us) >= 2:
+            ranked = sorted(us.items(), key=lambda kv: kv[1])
+            row["margin"] = (ranked[1][1] / ranked[0][1]
+                             if ranked[0][1] > 0 else float("inf"))
+        out[key] = row
+    return out

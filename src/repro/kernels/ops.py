@@ -8,6 +8,7 @@ real TPU set ``interpret=False``/default).
 from __future__ import annotations
 
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
@@ -15,6 +16,7 @@ import numpy as np
 
 from repro.core.pyramid import gaussian_kernel_1d, octave_increments
 from repro.kernels import dispatch as _dispatch
+from repro.obs import profile as _obs_profile
 from repro.kernels import harris as _harris
 from repro.kernels import blur as _blur
 from repro.kernels import fastscore as _fast
@@ -249,8 +251,24 @@ def match_best2(queries, db, db_valid=None, *, metric: str = "l2",
                           use_pallas=use_pallas)
     elif path not in MATCH_PATHS:
         raise ValueError(f"unknown path {path!r} (want one of {MATCH_PATHS})")
-    return _match_impl(queries, db, db_valid, metric=metric, path=path,
-                       interpret=interpret)
+    prof = _obs_profile.profiler()
+    if not prof.enabled:
+        # hot path: zero extra work, and critically NO synchronization —
+        # profiling must never change the async dispatch behavior of an
+        # unprofiled run
+        return _match_impl(queries, db, db_valid, metric=metric, path=path,
+                           interpret=interpret)
+    qb, kb, db_w = _dispatch.shape_bucket(nq, nk, queries.shape[1])
+    t0 = time.monotonic()
+    out = _match_impl(queries, db, db_valid, metric=metric, path=path,
+                      interpret=interpret)
+    try:
+        jax.block_until_ready(out)             # put async work on the clock
+    except Exception:  # noqa: BLE001 — tracers inside someone else's jit
+        pass
+    prof.record_call(f"match:{metric}:{path}:q{qb}k{kb}d{db_w}",
+                     time.monotonic() - t0)
+    return out
 
 
 @functools.partial(jax.jit, static_argnames=("scales_per_octave",

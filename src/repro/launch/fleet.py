@@ -22,6 +22,7 @@ import time
 import numpy as np
 
 from repro.configs.difet_paper import DifetConfig
+from repro.obs import metrics as obs_metrics
 from repro.serve import (Fleet, FleetConfig, RouterConfig, ServeConfig,
                          Shed)
 from repro.serve.trace import TraceConfig, make_trace, scene_key, tile_pool
@@ -116,6 +117,27 @@ def report(label, wall, latencies, sheds, fleet):
     return s
 
 
+def chaos_summary(fleet, sheds) -> None:
+    """Post-run summary after a ``--kill-after`` chaos run, answered
+    from the metrics registry (`repro/obs/metrics.py`): sheds by reason,
+    re-admissions, replica deaths, and the shared disk tier's hit rate
+    — the 'did the fleet absorb the kill' digest."""
+    m = obs_metrics.registry().snapshot()
+    s = fleet.stats()
+    print("chaos summary (metrics registry):")
+    shed_counters = {k.rsplit(".", 1)[1]: v for k, v in m.items()
+                     if k.startswith("difet.router.shed.")}
+    print(f"  sheds by reason: {shed_counters or dict(sheds) or '{}'}")
+    print(f"  re-admissions: {int(m.get('difet.router.readmitted', 0))}  "
+          f"replicas dead: {int(m.get('difet.fleet.replicas_dead', 0))}")
+    dh = m.get("difet.cache.disk_hits", 0)
+    dm = m.get("difet.cache.disk_misses", 0)
+    rate = dh / (dh + dm) if (dh + dm) else 0.0
+    print(f"  disk tier: {int(dh)} hits / {int(dm)} misses "
+          f"({rate:.1%} hit rate)")
+    print(f"  outstanding after drain: {s['outstanding']}")
+
+
 def smoke(args) -> int:
     """CI smoke: 2 replicas, short trace with a mid-trace replica kill;
     assert zero accepted-request loss, bounded shed rate, and bit-parity
@@ -208,6 +230,8 @@ def main(argv=None):
                                  kill_after=args.kill_after)
     stats = report("fleet", wall, lat, sheds, fleet)
     fleet.close()
+    if args.kill_after:
+        chaos_summary(fleet, sheds)
     return stats
 
 

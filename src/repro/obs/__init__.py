@@ -1,0 +1,31 @@
+"""DIFET observability subsystem (docs/observability.md).
+
+One package, four concerns, threaded through every serving layer:
+
+* ``metrics.py`` — lock-cheap counters/gauges + fixed-bucket histograms
+  with bounded-memory p50/p95/p99 (retires the unbounded per-request
+  latency lists behind the old ``stats()`` quantiles);
+* ``trace.py`` — structured span tracing: a trace id minted at router
+  admission follows the request through queueing, batch execution, the
+  cache tiers and crash re-admission; recorded into a bounded flight
+  recorder, no-op (and measurably free) by default;
+* ``profile.py`` — kernel profiling hooks keyed by the PR 5 dispatch
+  bucket, plus optional ``jax.profiler`` capture;
+* ``export.py`` — Chrome-trace JSON + flat metrics JSON exporters, the
+  schema validator CI gates on, and the latency-breakdown report.
+
+Driver: ``python -m repro.launch.obs`` (traced fleet run → artifacts →
+report; ``--explain-dispatch`` decodes the dispatch cache).
+"""
+from repro.obs.metrics import (Counter, Gauge, Histogram,  # noqa: F401
+                               MetricsRegistry, registry, set_registry)
+from repro.obs.trace import (FlightRecorder, NoopRecorder, Span,  # noqa: F401
+                             get_recorder, set_recorder, enabled,
+                             new_trace_id, current_trace_id, use_trace,
+                             span, emit_span)
+from repro.obs.profile import (KernelProfiler, profiler,  # noqa: F401
+                               set_profiler, profile_call, capture)
+from repro.obs.export import (spans_to_chrome, write_chrome_trace,  # noqa: F401
+                              metrics_payload, write_metrics_json,
+                              validate_chrome_trace, latency_breakdown,
+                              render_report)

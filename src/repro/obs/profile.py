@@ -1,0 +1,156 @@
+"""Kernel profiling hooks: per-call wall/compile stamps keyed by the
+PR 5 dispatch bucket, plus optional ``jax.profiler`` trace capture.
+
+The benchmark-gated dispatcher (`kernels/dispatch.py`) decides *which*
+matcher implementation runs, but after the decision the kernels execute
+invisibly inside jit.  :class:`KernelProfiler` makes the hot calls
+attributable: when enabled, `kernels/ops.py::match_best2` blocks on its
+result and stamps the wall time under ``(metric, path, shape-bucket)``
+— the same bucket key the dispatcher caches verdicts under, so a
+profile row lines up 1:1 with a dispatch-cache entry — and the serving
+compile path (`serve/buckets.py::warmup` / ``CompileCache``) stamps
+per-program compile seconds.  Disabled (the default), the only cost is
+one boolean check per call site, and no call gains a synchronization
+point — profiling must never change async dispatch behavior of an
+unprofiled run.
+
+For whole-program traces, :func:`capture` wraps a block in
+``jax.profiler.trace`` (TensorBoard-loadable) when the installed jax
+exposes it — gated, never required, because CI runs CPU-only jax where
+capture may be unavailable.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+import time
+from typing import Dict, Iterator, Optional, Tuple
+
+__all__ = ["KernelProfiler", "profiler", "set_profiler", "profile_call",
+           "record_call", "record_compile", "capture"]
+
+
+class KernelProfiler:
+    """Accumulates per-key call/compile stamps (bounded: one row per
+    distinct key — keys are dispatch buckets / program ids, a small
+    closed set).
+
+    A row holds ``calls``, total/last wall seconds, and compile seconds
+    when a compile was attributed to the key.  ``snapshot()`` renders
+    rows JSON-able for the metrics exporter."""
+
+    def __init__(self, enabled: bool = True):
+        self.enabled = enabled
+        self._rows: Dict[str, Dict[str, float]] = {}
+        self._lock = threading.Lock()
+
+    def _row(self, key: str) -> Dict[str, float]:
+        r = self._rows.get(key)
+        if r is None:
+            r = self._rows[key] = {"calls": 0, "wall_s": 0.0,
+                                   "last_wall_s": 0.0, "compile_s": 0.0,
+                                   "compiles": 0}
+        return r
+
+    def record_call(self, key: str, wall_s: float) -> None:
+        """Stamp one timed call under ``key``."""
+        with self._lock:
+            r = self._row(key)
+            r["calls"] += 1
+            r["wall_s"] += wall_s
+            r["last_wall_s"] = wall_s
+
+    def record_compile(self, key: str, compile_s: float) -> None:
+        """Attribute one compile (trace + XLA) to ``key``."""
+        with self._lock:
+            r = self._row(key)
+            r["compiles"] += 1
+            r["compile_s"] += compile_s
+
+    def snapshot(self) -> Dict[str, Dict[str, float]]:
+        """``{key: row}`` copy of every profiled key."""
+        with self._lock:
+            return {k: dict(v) for k, v in sorted(self._rows.items())}
+
+    def reset(self) -> None:
+        """Drop every row (per-run isolation)."""
+        with self._lock:
+            self._rows.clear()
+
+
+class _NoopProfiler(KernelProfiler):
+    """Disabled profiler: instrumentation sites see ``enabled=False``
+    and skip timing entirely."""
+
+    def __init__(self):
+        super().__init__(enabled=False)
+
+
+_PROFILER: KernelProfiler = _NoopProfiler()
+
+
+def profiler() -> KernelProfiler:
+    """The process-global profiler (disabled by default)."""
+    return _PROFILER
+
+
+def set_profiler(p: KernelProfiler) -> KernelProfiler:
+    """Install a profiler (returns the previous one); pass
+    ``KernelProfiler()`` to enable, ``None``-like noop to disable."""
+    global _PROFILER
+    prev, _PROFILER = _PROFILER, p
+    return prev
+
+
+def record_call(key: str, wall_s: float) -> None:
+    """Module-level convenience for :meth:`KernelProfiler.record_call`
+    (no-op when profiling is disabled)."""
+    p = _PROFILER
+    if p.enabled:
+        p.record_call(key, wall_s)
+
+
+def record_compile(key: str, compile_s: float) -> None:
+    """Module-level convenience for :meth:`KernelProfiler.record_compile`
+    (no-op when profiling is disabled)."""
+    p = _PROFILER
+    if p.enabled:
+        p.record_compile(key, compile_s)
+
+
+@contextlib.contextmanager
+def profile_call(key: str, *, block=None) -> Iterator[None]:
+    """Time a block under ``key`` when profiling is enabled (one boolean
+    check otherwise).  ``block`` (optional) is called with no args before
+    the clock stops — pass a ``block_until_ready`` thunk so async work is
+    actually on the clock."""
+    p = _PROFILER
+    if not p.enabled:
+        yield
+        return
+    t0 = time.monotonic()
+    try:
+        yield
+    finally:
+        if block is not None:
+            block()
+        p.record_call(key, time.monotonic() - t0)
+
+
+@contextlib.contextmanager
+def capture(logdir: Optional[str]) -> Iterator[bool]:
+    """Optional ``jax.profiler`` trace capture around a block: yields
+    True when a capture is actually running (jax present, profiler
+    available, ``logdir`` set), False otherwise — callers behave
+    identically either way, the capture is pure side-band."""
+    if not logdir:
+        yield False
+        return
+    try:
+        import jax
+        ctx = jax.profiler.trace(logdir)
+    except Exception:  # noqa: BLE001 — capture is best-effort by contract
+        yield False
+        return
+    with ctx:
+        yield True

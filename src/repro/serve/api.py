@@ -47,6 +47,8 @@ from repro.configs.difet_paper import DifetConfig
 from repro.core.bundle import rgba_to_gray, tile_scene
 from repro.core.engine import normalize_algorithms
 from repro.core.job import DifetJob
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serve.buckets import BucketTable, CompileCache, warmup
 from repro.serve.cache import ResultCache, TieredResultCache
 from repro.serve.scheduler import (BatchScheduler, ServiceClosed,
@@ -235,6 +237,12 @@ class FeatureService:
         self._step_lock = step_lock
         self.busy_s = 0.0                 # runner-thread-only accumulator
         self.steps = 0
+        # process-wide per-layer histograms (obs/export.py breakdown
+        # table aggregates across replicas); handles cached here so the
+        # runner's per-item path is one bounded observe, no registry lock
+        _reg = obs_metrics.registry()
+        self._m_queue_s = _reg.histogram("difet.scheduler.queue_s")
+        self._m_step_s = _reg.histogram("difet.kernel.step_s")
         self.requests = 0                 # accepted submit() calls
         self.shed = 0                     # submit() calls shed on overload
         self.scheduler = BatchScheduler(
@@ -277,12 +285,17 @@ class FeatureService:
     # -- submission ----------------------------------------------------------
     def submit(self, image: Union[np.ndarray, bytes, str], algorithms,
                request_id: Optional[str] = None,
-               block: bool = False) -> ResponseHandle:
+               block: bool = False,
+               trace_id: Optional[str] = None) -> ResponseHandle:
         """Enqueue one request.  ``image`` is a grayscale/RGBA array,
         ``.npy`` bytes, or a registered scene id; oversize images are split
         into largest-bucket tiles and merged on completion.  Raises
         :class:`ServiceOverloaded` when the queue is full (``block=True``
-        waits instead)."""
+        waits instead).  ``trace_id`` ties the request's spans to a
+        router-minted trace (`obs/trace.py`); direct callers get one
+        minted here when tracing is on."""
+        tracing = obs_trace.enabled()
+        tid = trace_id or (obs_trace.new_trace_id() if tracing else "")
         algs = normalize_algorithms(algorithms)
         # device/group/coalescing keys use the sorted set (per-algorithm
         # results are order-independent), so permuted algorithm lists share
@@ -306,9 +319,13 @@ class FeatureService:
         # with its earlier tiles already queued; they complete into the
         # result cache, so a retry reuses rather than recomputes them
         try:
-            parts = [self._submit_tile(tile, header, bucket, canonical,
-                                       cfg_dig, block)
-                     for tile, header in tiles]
+            # the ambient trace id lets un-threaded layers underneath
+            # (the cache tiers' disk I/O) tag their spans with this
+            # request's trace (obs/trace.py contextvar)
+            with obs_trace.use_trace(tid):
+                parts = [self._submit_tile(tile, header, bucket, canonical,
+                                           cfg_dig, block, tid)
+                         for tile, header in tiles]
         except ServiceOverloaded:
             with self._lock:
                 self.shed += 1
@@ -318,12 +335,12 @@ class FeatureService:
         return ResponseHandle(rid, algs, parts, bucket, enqueued_at)
 
     def _submit_tile(self, tile, header, bucket, algs, cfg_dig,
-                     block) -> _TilePart:
+                     block, trace_id="") -> _TilePart:
         if self.cache.capacity <= 0:
             # cache disabled: digest/probe/in-flight coalescing can't pay
             # for themselves — straight to the queue (zero-copy responses)
             fut = self.scheduler.submit(tile, header, bucket, algs,
-                                        block=block)
+                                        block=block, trace_id=trace_id)
             return _TilePart({}, algs, fut)
         # the key must fold the header's grid position + valid extent:
         # results carry scene-GLOBAL coordinates (ys = ty*tile + ...), so
@@ -352,7 +369,8 @@ class FeatureService:
         if fut is None:
             fut = self.scheduler.submit(tile, header, bucket, missing,
                                         digest=digest,
-                                        cfg_digest=cfg_dig, block=block)
+                                        cfg_digest=cfg_dig, block=block,
+                                        trace_id=trace_id)
             with self._lock:
                 if key not in self._inflight:
                     self._inflight[key] = fut
@@ -378,6 +396,16 @@ class FeatureService:
 
     def _run_batch_locked(self, bucket, algorithms, items) -> None:
         t_start = time.monotonic()
+        tracing = obs_trace.enabled()
+        if tracing:
+            # queue-wait spans: enqueue → batch formation, one per item,
+            # carrying the item's trace id (stamps already taken — no
+            # extra clock reads on the untraced path)
+            for it in items:
+                obs_trace.emit_span("queue_wait", "scheduler",
+                                    it.enqueued_at, t_start,
+                                    trace_id=it.trace_id,
+                                    replica=self.name, bucket=bucket)
         # per-bucket scratch canvas, reused across steps (runner thread is
         # the only writer).  Rows beyond the batch keep stale-but-finite
         # tile data; their headers are re-marked pad, so the engine masks
@@ -393,7 +421,16 @@ class FeatureService:
             tiles[i] = it.tile
             headers[i] = it.header
         fn = self.compile_cache.get(bucket, algorithms)
+        t_kernel = time.monotonic()
         out = jax.device_get(fn(tiles, headers))   # one host transfer
+        t_kernel_done = time.monotonic()
+        self._m_step_s.observe(t_kernel_done - t_kernel)
+        batch_span = None
+        if tracing:
+            batch_span = obs_trace.emit_span(
+                "device_step", "kernel", t_kernel, t_kernel_done,
+                trace_id="", replica=self.name, bucket=bucket,
+                batch_size=len(items), algorithms=",".join(algorithms))
         for res in out.values():
             for v in res.values():
                 v.setflags(write=False)            # responses are read-only
@@ -408,17 +445,26 @@ class FeatureService:
         now_mono = time.monotonic()
         for i, it in enumerate(items):
             it.completed_at = completed_at
-            self.scheduler.latency_samples.append(
-                now_mono - it.enqueued_at)
+            dt = now_mono - it.enqueued_at
+            self.scheduler.queue_hist.observe(dt)
+            self._m_queue_s.observe(dt)
             res = {}
-            for alg in algorithms:
-                sliced = {k: v[i] for k, v in out[alg].items()}
-                if caching:
-                    # freeze = an owned copy, so a cache entry never pins
-                    # the whole batch buffer it was sliced from
-                    sliced = self.cache.put(
-                        (it.digest, alg, it.cfg_digest), sliced)
-                res[alg] = sliced
+            # ambient trace for the cache tiers' disk-write spans
+            with obs_trace.use_trace(it.trace_id):
+                for alg in algorithms:
+                    sliced = {k: v[i] for k, v in out[alg].items()}
+                    if caching:
+                        # freeze = an owned copy, so a cache entry never
+                        # pins the whole batch buffer it was sliced from
+                        sliced = self.cache.put(
+                            (it.digest, alg, it.cfg_digest), sliced)
+                    res[alg] = sliced
+            if tracing:
+                obs_trace.emit_span("exec", "batch", t_kernel, now_mono,
+                                    trace_id=it.trace_id,
+                                    parent_id=batch_span or "",
+                                    replica=self.name, bucket=bucket,
+                                    batch_size=len(items))
             if not it.future.done():               # kill() may have failed it
                 try:
                     it.future.set_result((res, it.batch_size, completed_at))

@@ -19,6 +19,7 @@ landed in beyond the documented tile-size semantics.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
@@ -27,6 +28,9 @@ import numpy as np
 from repro.configs.difet_paper import DifetConfig
 from repro.core.bundle import tile_scene
 from repro.core.engine import make_serve_step
+from repro.obs import metrics as obs_metrics
+from repro.obs import profile as obs_profile
+from repro.obs import trace as obs_trace
 
 
 class BucketTable:
@@ -154,10 +158,23 @@ def warmup(compile_cache: CompileCache,
     """Warm-up driver: compile every (bucket, algorithm-set) pair by
     pushing one all-padding batch through each program, so no live request
     ever pays a compile.  Returns the number of compiled programs."""
+    hist = obs_metrics.registry().histogram("difet.compile.program_s")
     for bucket in (buckets if buckets is not None
                    else compile_cache.table.interiors):
         tiles, headers = compile_cache.empty_batch(bucket)
         for algs in algorithm_sets:
+            key = (int(bucket), tuple(algs))
+            fresh = key not in compile_cache._fns
             fn = compile_cache.get(bucket, tuple(algs))
+            t0 = time.monotonic()
             jax.block_until_ready(fn(tiles, headers))
+            t1 = time.monotonic()
+            if fresh:                          # first call = trace + compile
+                hist.observe(t1 - t0)
+                obs_profile.record_compile(
+                    f"serve:{bucket}:{'+'.join(algs)}", t1 - t0)
+                if obs_trace.enabled():
+                    obs_trace.emit_span(
+                        "compile_program", "compile", t0, t1, trace_id="",
+                        bucket=bucket, algorithms=",".join(algs))
     return compile_cache.programs

@@ -35,12 +35,16 @@ import hashlib
 import io
 import os
 import threading
+import time
 import zipfile
 from collections import OrderedDict
 from pathlib import Path
 from typing import Dict, Optional
 
 import numpy as np
+
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 
 def freeze(tree: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
@@ -137,6 +141,13 @@ class DiskCacheTier:
         self.misses = 0
         self.inserts = 0
         self._lock = threading.Lock()
+        # disk-tier I/O latency histograms (bounded; shared across every
+        # tier instance so the per-run breakdown aggregates the fleet)
+        _reg = obs_metrics.registry()
+        self._m_read_s = _reg.histogram("difet.cache.disk_read_s")
+        self._m_write_s = _reg.histogram("difet.cache.disk_write_s")
+        self._m_hits = _reg.counter("difet.cache.disk_hits")
+        self._m_misses = _reg.counter("difet.cache.disk_misses")
 
     def path_for(self, key) -> Path:
         """Deterministic entry path for a cache key (any tuple of
@@ -147,6 +158,7 @@ class DiskCacheTier:
     def get(self, key) -> Optional[Dict[str, np.ndarray]]:
         """Load + freeze the entry, or None (miss / torn entry)."""
         path = self.path_for(key)
+        t0 = time.monotonic()
         try:
             raw = path.read_bytes()
             with np.load(io.BytesIO(raw), allow_pickle=False) as z:
@@ -160,6 +172,7 @@ class DiskCacheTier:
         except FileNotFoundError:
             with self._lock:
                 self.misses += 1
+            self._m_misses.inc()
             return None
         except (OSError, ValueError, KeyError, zipfile.BadZipFile):
             try:
@@ -168,13 +181,21 @@ class DiskCacheTier:
                 pass
             with self._lock:
                 self.misses += 1
+            self._m_misses.inc()
             return None
+        t1 = time.monotonic()
         with self._lock:
             self.hits += 1
+        self._m_hits.inc()
+        self._m_read_s.observe(t1 - t0)
+        if obs_trace.enabled():                 # ambient trace id (if any)
+            obs_trace.emit_span("disk_get", "cache", t0, t1,
+                                bytes=len(raw))
         return out
 
     def put(self, key, value: Dict[str, np.ndarray]) -> None:
         """Write-through one frozen feature dict (atomic rename)."""
+        t0 = time.monotonic()
         path = self.path_for(key)
         path.parent.mkdir(parents=True, exist_ok=True)
         buf = io.BytesIO()
@@ -188,6 +209,11 @@ class DiskCacheTier:
         tmp.replace(path)
         with self._lock:
             self.inserts += 1
+        t1 = time.monotonic()
+        self._m_write_s.observe(t1 - t0)
+        if obs_trace.enabled():
+            obs_trace.emit_span("disk_put", "cache", t0, t1,
+                                bytes=buf.getbuffer().nbytes)
 
     def __len__(self) -> int:
         return sum(1 for _ in self.root.glob("*/*.npz"))

@@ -43,6 +43,7 @@ import threading
 from typing import Dict, Optional, Sequence, Tuple
 
 from repro.core.job import LeaseBoard
+from repro.obs import metrics as obs_metrics
 from repro.serve.api import FeatureService, ServeConfig
 from repro.serve.router import Router, RouterConfig
 
@@ -120,6 +121,12 @@ class Fleet:
         self._scenes: Dict[str, object] = {}
         self._autoscaler: Optional[threading.Thread] = None
         self._stop = threading.Event()
+        # fleet lifecycle counters + pool-size gauge (difet.fleet.*)
+        _reg = obs_metrics.registry()
+        self._m_scale_up = _reg.counter("difet.fleet.scale_up")
+        self._m_scale_down = _reg.counter("difet.fleet.scale_down")
+        self._m_dead = _reg.counter("difet.fleet.replicas_dead")
+        self._g_ready = _reg.gauge("difet.fleet.ready_replicas")
         for _ in range(self.cfg.initial_replicas):
             self.spawn_replica()
 
@@ -148,6 +155,7 @@ class Fleet:
         self.leases.acquire(name, name)
         rep.state = READY
         self.router.add_replica(name, svc)
+        self._g_ready.set(len(self.ready_replicas()))
         return name
 
     def drain_replica(self, name: str, timeout: float = 60.0) -> None:
@@ -163,6 +171,7 @@ class Fleet:
         self.router.remove_replica(name)
         self.leases.release(name, name)
         rep.state = RETIRED
+        self._g_ready.set(len(self.ready_replicas()))
 
     def kill_replica(self, name: str) -> int:
         """Chaos: crash a replica mid-flight.  Its queued + on-device
@@ -176,6 +185,8 @@ class Fleet:
         rep.service.kill()
         self.leases.release(name, name)
         self.router.remove_replica(name, died=True)
+        self._m_dead.inc()
+        self._g_ready.set(len(self.ready_replicas()))
         return self.router.readmitted
 
     # ---- liveness + autoscaling ---------------------------------------------
@@ -203,7 +214,10 @@ class Fleet:
                     rep.state = DEAD
                 self.router.remove_replica(name, died=True)
                 self.leases.release(name, name)
+                self._m_dead.inc()
                 died.append(name)
+        if died:
+            self._g_ready.set(len(self.ready_replicas()))
         return died
 
     def autoscale_tick(self) -> str:
@@ -214,6 +228,7 @@ class Fleet:
         ready = self.ready_replicas()
         if not ready:
             if len(self.replicas) < self.cfg.max_replicas:
+                self._m_scale_up.inc()
                 return f"scale_up:{self.spawn_replica()}"
             return "hold"
         depth = self.router.total_pending()
@@ -221,6 +236,7 @@ class Fleet:
         if (per_replica > self.cfg.scale_up_queue_per_replica
                 and len(ready) < self.cfg.max_replicas):
             self._idle_ticks = 0
+            self._m_scale_up.inc()
             return f"scale_up:{self.spawn_replica()}"
         if per_replica < self.cfg.scale_down_queue_per_replica:
             self._idle_ticks += 1
@@ -232,6 +248,7 @@ class Fleet:
                 name = min(ready, key=lambda n: (
                     self.replicas[n].service.scheduler.queue_depth, n))
                 self.drain_replica(name)
+                self._m_scale_down.inc()
                 return f"scale_down:{name}"
         else:
             self._idle_ticks = 0

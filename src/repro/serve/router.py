@@ -42,6 +42,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serve.api import ExtractResponse, FeatureService
 from repro.serve.scheduler import (ReplicaDied, ServiceClosed,
                                    ServiceOverloaded)
@@ -180,7 +182,8 @@ class _FleetRequest:
     bumped on every re-dispatch."""
 
     def __init__(self, rid: str, image, algorithms, tenant: str,
-                 route_key: str, replica: str, handle):
+                 route_key: str, replica: str, handle,
+                 trace_id: str = ""):
         self.rid = rid
         self.image = image
         self.algorithms = algorithms
@@ -188,6 +191,7 @@ class _FleetRequest:
         self.route_key = route_key
         self.replica = replica
         self.handle = handle
+        self.trace_id = trace_id
         self.generation = 0
         self.error: Optional[BaseException] = None
 
@@ -268,6 +272,12 @@ class Router:
         self.routed_spill = 0
         self.shed_by_reason: Dict[str, int] = {}
         self.tenant_counts: Dict[str, Dict[str, int]] = {}
+        # registry mirrors (difet.router.*) for the per-run metrics JSON
+        _reg = obs_metrics.registry()
+        self._m_admitted = _reg.counter("difet.router.admitted")
+        self._m_readmitted = _reg.counter("difet.router.readmitted")
+        self._m_affinity = _reg.counter("difet.router.routed_affinity")
+        self._m_spill = _reg.counter("difet.router.routed_spill")
 
     # ---- pool membership (called by Fleet) ---------------------------------
     def add_replica(self, name: str, service: FeatureService) -> None:
@@ -318,6 +328,12 @@ class Router:
             t = self.tenant_counts.setdefault(
                 tenant, {"admitted": 0, "shed": 0})
             t["shed"] += 1
+        obs_metrics.registry().counter(f"difet.router.shed.{reason}").inc()
+        rec = obs_trace.get_recorder()
+        if rec.enabled:
+            # a shed is an operator-actionable event: snapshot what the
+            # fleet was doing when it happened (deduped per reason)
+            getattr(rec, "dump_on", lambda _r: None)(f"shed-{reason}")
         raise Shed(reason, detail, tenant=tenant,
                    retry_after_s=retry_after_s)
 
@@ -386,9 +402,16 @@ class Router:
                 slot = self._slots[name]
         if name is None:
             self._shed(SHED_NO_REPLICA, tenant, "no replica accepting work")
+        # trace id minted at admission (the request passed every gate):
+        # it follows the request through the replica scheduler, batch
+        # execution, the cache tiers, and crash re-admission
+        tracing = obs_trace.enabled()
+        tid = obs_trace.new_trace_id() if tracing else ""
+        t_admit = time.monotonic() if tracing else 0.0
         try:
             handle = slot.service.submit(image, algorithms,
-                                         request_id=request_id, block=False)
+                                         request_id=request_id, block=False,
+                                         trace_id=tid)
         except (ServiceOverloaded, ServiceClosed):
             # the chosen replica itself refused (its local queue bound is
             # tighter than the global one, or it closed under us): one
@@ -399,7 +422,8 @@ class Router:
                            f"replica {name} overloaded, no alternative")
             try:
                 handle = self._slots[alt].service.submit(
-                    image, algorithms, request_id=request_id, block=False)
+                    image, algorithms, request_id=request_id, block=False,
+                    trace_id=tid)
                 name, spilled = alt, True
             except (ServiceOverloaded, ServiceClosed):
                 self._shed(SHED_FLEET_SATURATED, tenant,
@@ -409,7 +433,8 @@ class Router:
             rid = request_id or f"fleet-{self._rid:08d}"
             req = _FleetRequest(rid, image, tuple(algorithms) if
                                 not isinstance(algorithms, str)
-                                else algorithms, tenant, key, name, handle)
+                                else algorithms, tenant, key, name, handle,
+                                trace_id=tid)
             self._outstanding[rid] = req
             self.submitted += 1
             if spilled:
@@ -419,6 +444,12 @@ class Router:
             t = self.tenant_counts.setdefault(
                 tenant, {"admitted": 0, "shed": 0})
             t["admitted"] += 1
+        self._m_admitted.inc()
+        (self._m_spill if spilled else self._m_affinity).inc()
+        if tracing:
+            obs_trace.emit_span("admit", "router", t_admit, time.monotonic(),
+                                trace_id=tid, rid=rid, tenant=tenant,
+                                replica=name, spilled=spilled)
         return FleetHandle(self, req)
 
     def extract(self, image, algorithms, tenant: str = "default",
@@ -464,10 +495,11 @@ class Router:
                                      "accepts work", tenant=req.tenant)
                     self._cv.notify_all()
                 continue
+            t0 = time.monotonic()
             try:
                 new_handle = self._slots[target].service.submit(
                     req.image, req.algorithms, request_id=req.rid,
-                    block=True)
+                    block=True, trace_id=req.trace_id)
             except (ServiceOverloaded, ServiceClosed) as e:
                 with self._cv:
                     req.error = e
@@ -479,6 +511,16 @@ class Router:
                 req.generation += 1
                 self.readmitted += 1
                 self._cv.notify_all()
+            self._m_readmitted.inc()
+            if obs_trace.enabled():
+                # links the dead replica's spans to the recompute: same
+                # trace id as the original admission, old/new replica
+                # named in the attrs (chaos-tested)
+                obs_trace.emit_span("readmit", "router", t0,
+                                    time.monotonic(),
+                                    trace_id=req.trace_id, rid=req.rid,
+                                    old_replica=dead_replica,
+                                    new_replica=target)
             n += 1
         return n
 

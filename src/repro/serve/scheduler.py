@@ -27,11 +27,13 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
-from collections import deque
 from concurrent.futures import Future, InvalidStateError
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 
 class ServiceOverloaded(RuntimeError):
@@ -68,6 +70,7 @@ class WorkItem:
     enqueued_at: float = 0.0
     batch_size: int = 0              # filled by the runner
     completed_at: float = 0.0        # wall clock at batch completion (runner)
+    trace_id: str = ""               # minted at router admission (obs/trace)
 
     @property
     def group_key(self) -> tuple:
@@ -95,9 +98,12 @@ class BatchScheduler:
         self.items = 0
         self.rejected = 0
         self.batch_size_hist: Dict[int, int] = {}
-        # queue latency samples (enqueue → batch completion, seconds) —
-        # appended by the service runner, bounded so stats() stays cheap
-        self.latency_samples: "deque[float]" = deque(maxlen=4096)
+        # queue latency (enqueue → batch completion, seconds) — observed
+        # by the service runner into a fixed-bucket histogram: bounded
+        # memory forever (the old per-request deque grew with traffic and
+        # its np.percentile sorted on every stats() poll), quantiles
+        # answered by interpolated bucket walk (obs/metrics.py)
+        self.queue_hist = obs_metrics.Histogram(f"{name}.queue_s")
         self._thread = threading.Thread(target=self._loop, daemon=True,
                                         name=name)
         self._thread.start()
@@ -105,7 +111,8 @@ class BatchScheduler:
     # ---- client side -------------------------------------------------------
     def submit(self, tile, header, bucket, algorithms, digest="",
                cfg_digest="", block: bool = False,
-               timeout: Optional[float] = None) -> Future:
+               timeout: Optional[float] = None,
+               trace_id: str = "") -> Future:
         deadline = None if timeout is None else time.monotonic() + timeout
         with self._cv:
             if self._stopping:
@@ -132,7 +139,8 @@ class BatchScheduler:
                             bucket=int(bucket),
                             algorithms=tuple(algorithms), digest=digest,
                             cfg_digest=cfg_digest, future=Future(),
-                            enqueued_at=time.monotonic())
+                            enqueued_at=time.monotonic(),
+                            trace_id=trace_id)
             self._seq += 1
             self._pending.append(item)
             self._cv.notify_all()
@@ -221,6 +229,17 @@ class BatchScheduler:
             victims = self._pending + self._active
             self._pending = []
             self._cv.notify_all()
+        rec = obs_trace.get_recorder()
+        if rec.enabled:
+            now = time.monotonic()
+            for it in victims:                 # mark the orphaned work
+                obs_trace.emit_span("killed", "scheduler", it.enqueued_at,
+                                    now, trace_id=it.trace_id,
+                                    scheduler=self._thread.name,
+                                    exc=type(exc).__name__)
+            # flight-recorder artifact: what the replica was doing when
+            # it died (deduped per reason inside dump_on)
+            getattr(rec, "dump_on", lambda _r: None)("replica_died")
         for it in victims:
             if not it.future.done():
                 try:
@@ -231,9 +250,10 @@ class BatchScheduler:
     def stats(self) -> Dict[str, object]:
         """Counter snapshot: totals, queue depth, batch-size histogram /
         mean occupancy, and p50/p99 queue latency (enqueue → batch
-        completion) over the most recent completions."""
+        completion) estimated from the bounded fixed-bucket histogram
+        (`obs/metrics.py::Histogram` — constant memory at any traffic
+        volume, interpolated quantiles)."""
         with self._cv:
-            lat = np.asarray(self.latency_samples, np.float64)
             snap = {"batches": self.batches, "items": self.items,
                     "submitted": self._seq,
                     "rejected": self.rejected,
@@ -244,8 +264,6 @@ class BatchScheduler:
                     "mean_batch": (self.items / self.batches
                                    if self.batches else 0.0)}
         snap["occupancy"] = snap["mean_batch"] / self.max_batch
-        snap["p50_queue_ms"] = (float(np.percentile(lat, 50)) * 1e3
-                                if lat.size else 0.0)
-        snap["p99_queue_ms"] = (float(np.percentile(lat, 99)) * 1e3
-                                if lat.size else 0.0)
+        snap["p50_queue_ms"] = self.queue_hist.quantile(0.50) * 1e3
+        snap["p99_queue_ms"] = self.queue_hist.quantile(0.99) * 1e3
         return snap
