@@ -25,6 +25,12 @@ Four measurements on an in-process `serve/fleet.py::Fleet` replaying
   tier) must be *bit-identical* to direct
   ``core/engine.py::extract_features_multi`` on the same padded tiles
   (gated; covers router, replica, and npz round trip in one check).
+* **SLO autoscaler** — a 1-replica fleet with an unmeetable p99 SLO
+  must scale up on the *measured* breach (``p99_latency`` trigger, not
+  the queue fast path), then drain back down once the window is clean,
+  losing nothing (gated); every decision — trigger, value, before/after
+  replica count — is serialized into the row's ``derived`` field and so
+  into the ``BENCH_<rev>.json`` snapshot.
 
 Timing gates (speedup, shed) re-measure once before failing — CPU-quota
 noise on shared CI hosts; parity and cache gates never retry.
@@ -201,6 +207,18 @@ def run(quick: bool = False, strict: bool = True):
                  f"p99_ms={p99_ms:.2f}"))
     shed_ok = shed_rate <= 0.01
 
+    # -- SLO autoscaler (gated: p99-triggered up, drained down, 0 lost) -----
+    a = _autoscale_phase(24 if quick else 48)
+    ups = [e for e in a["events"]
+           if e["action"] == "scale_up" and e["trigger"] == "p99_latency"]
+    downs = [e for e in a["events"] if e["action"] == "scale_down"]
+    autoscale_ok = (bool(ups) and bool(downs)
+                    and a["served"] == a["expected"])
+    rows.append(("fleet/slo_autoscaler", a["wall"] / a["served"] * 1e6,
+                 f"served={a['served']}/{a['expected']};"
+                 f"ready_final={a['ready']};"
+                 f"decisions={_fmt_events(a['events'])}"))
+
     if strict:
         if not scaling_ok:
             raise FleetGateError(
@@ -219,7 +237,54 @@ def run(quick: bool = False, strict: bool = True):
             raise FleetGateError(
                 f"shed rate {shed_rate:.2%} > 1% at rated load "
                 f"{rate:.1f} req/s")
+        if not autoscale_ok:
+            raise FleetGateError(
+                f"SLO autoscaler gate: served={a['served']}/"
+                f"{a['expected']}, decisions="
+                f"{_fmt_events(a['events']) or 'none'} (need a "
+                f"p99_latency scale-up and a drained scale-down)")
     return rows
+
+
+def _autoscale_phase(n: int):
+    """SLO-autoscaler lifecycle under load: a 1-replica fleet with a
+    deliberately unmeetable p99 SLO must scale **up** on the measured
+    breach (the ``p99_latency`` trigger, queue fast path disabled), then
+    — once the latency window is clean — scale back **down** by
+    draining, dropping nothing.  Returns (events, served, wall_s); every
+    decision dict rides into the ``BENCH_<rev>.json`` row."""
+    base = DifetConfig(tile=TILE, halo=HALO, max_keypoints_per_tile=K)
+    cfg = FleetConfig(
+        serve=ServeConfig(base=base, buckets=(TILE,), max_batch=8,
+                          max_batch_delay_s=0.02, max_pending=4096,
+                          cache_entries=0),
+        initial_replicas=1, min_replicas=1, max_replicas=3,
+        warm_algorithm_sets=(ALGS,),
+        slo_p99_s=0.005,                   # any honest latency breaches
+        scale_up_queue_per_replica=1e9,    # isolate the p99 trigger
+        scale_down_queue_per_replica=2.0, scale_down_grace_ticks=2)
+    fleet = Fleet(cfg)
+    tcfg = _uniform_trace(n, seed=3)
+    trace, pool = make_trace(tcfg), tile_pool(tcfg)
+    t0 = time.perf_counter()
+    _, resps_a = _flood(fleet, trace, pool)
+    fleet.autoscale_tick()                 # p99 breach → scale up
+    # clean window + shallow queues: grace ticks, then drain one down
+    for _ in range(cfg.scale_down_grace_ticks + 1):
+        fleet.autoscale_tick()
+    # the shrunk fleet still serves a full replay, nothing dropped
+    _, resps_b = _flood(fleet, trace, pool)
+    events = fleet.stats()["scale_events"]
+    ready = len(fleet.ready_replicas())
+    fleet.close()
+    return {"events": events, "served": len(resps_a) + len(resps_b),
+            "expected": 2 * len(trace), "ready": ready,
+            "wall": time.perf_counter() - t0}
+
+
+def _fmt_events(events) -> str:
+    return "|".join(f"{e['action']}:{e['trigger']}:"
+                    f"{e['before']}->{e['after']}" for e in events)
 
 
 def _shed_phase(n: int, rate: float):

@@ -6,12 +6,17 @@ Open-loop injection at the trace's arrival offsets through the router:
 admission control sheds (typed: tenant quota vs fleet saturation), the
 consistent-hash ring routes hot scenes to their affinity replicas, and
 the shared disk cache tier turns cross-replica repeats into hits.
-``--autoscale`` runs the queue-driven autoscaler during the replay;
-``--kill-after N`` kills a replica after N accepted requests (chaos:
-the run must still complete every accepted request).
+``--proc`` spawns replicas as OS processes (`serve/proc.py`) over the
+spooled-file transport.  ``--autoscale`` runs the SLO-driven autoscaler
+during the replay; ``--kill-after N`` kills a replica after N accepted
+requests — for process replicas that is a raw ``kill -9`` detected only
+via the stale lease (chaos: the run must still complete every accepted
+request, bit-identically).
 
     PYTHONPATH=src python -m repro.launch.fleet --replicas 2 --requests 128
     PYTHONPATH=src python -m repro.launch.fleet --smoke      # CI gate
+    PYTHONPATH=src python -m repro.launch.fleet \\
+        --replicas 4 --proc --kill-after 16 --smoke          # chaos gate
 """
 from __future__ import annotations
 
@@ -49,7 +54,9 @@ def build_fleet(args) -> Fleet:
                                            ("harris", "shi_tomasi")),
                       cache_dir=args.cache_dir
                       or tempfile.mkdtemp(prefix="difet-fleet-cache-"),
-                      lease_ttl_s=args.lease_ttl)
+                      lease_ttl_s=args.lease_ttl,
+                      proc=args.proc,
+                      slo_p99_s=args.slo_ms * 1e-3)
     return Fleet(cfg)
 
 
@@ -66,10 +73,20 @@ def trace_config(args) -> TraceConfig:
 
 
 def replay(fleet, trace, pool, kill_after=0):
-    """Open-loop replay through the router.  Returns (wall, latencies,
-    shed_by_reason, n_killed_readmitted)."""
-    handles, sheds = [], {}
+    """Open-loop replay through the router.  Returns (wall, responses,
+    shed_by_reason, n_killed_readmitted, accepted_events) — the last is
+    index-aligned with ``responses`` (shed events are absent from both).
+
+    ``kill_after`` kills the deepest-queued replica once that many
+    requests are accepted.  Thread fleets take the eager
+    ``kill_replica`` path; process fleets get a raw ``kill -9``
+    (`Fleet.sigkill_replica`) and the victim is *only* discovered by the
+    maintenance tick noticing the stale lease — the tick runs inline
+    with the injection loop here, standing in for the background
+    autoscaler thread."""
+    handles, accepted, sheds = [], [], {}
     killed = False
+    sigkilled = None
     readmitted = 0
     t0 = time.perf_counter()
     for i, ev in enumerate(trace):
@@ -81,20 +98,48 @@ def replay(fleet, trace, pool, kill_after=0):
             handles.append(fleet.submit(pool[ev.pool_key], ev.algorithms,
                                         tenant=ev.tenant,
                                         scene_key=scene_key(ev)))
+            accepted.append(ev)
         except Shed as s:
             sheds[s.reason] = sheds.get(s.reason, 0) + 1
         if kill_after and not killed and len(handles) >= kill_after:
-            victim = fleet.ready_replicas()[0]
-            readmitted = fleet.kill_replica(victim)
-            print(f"[chaos] killed {victim} after {len(handles)} accepted "
-                  f"({readmitted} re-admitted)")
+            ready = fleet.ready_replicas()
+            victim = max(ready, key=lambda n: (
+                fleet.replicas[n].service.scheduler.queue_depth, n))
+            if fleet.cfg.proc:
+                pid = fleet.sigkill_replica(victim)
+                sigkilled = victim
+                print(f"[chaos] kill -9 {victim} (pid {pid}) after "
+                      f"{len(handles)} accepted; awaiting stale lease")
+            else:
+                readmitted = fleet.kill_replica(victim)
+                print(f"[chaos] killed {victim} after {len(handles)} "
+                      f"accepted ({readmitted} re-admitted)")
             killed = True
-    latencies = [h.result(120).timing["latency_s"] for h in handles]
-    return time.perf_counter() - t0, latencies, sheds, readmitted
+        if sigkilled is not None:
+            # stand-in for the autoscaler thread: detect the stale lease
+            if sigkilled in fleet.maintenance_tick():
+                readmitted = fleet.router.readmitted
+                print(f"[chaos] stale lease detected, {sigkilled} dead "
+                      f"({readmitted} re-admitted)")
+                sigkilled = None
+    deadline = time.perf_counter() + 30.0
+    while sigkilled is not None:          # trace ended before detection
+        if sigkilled in fleet.maintenance_tick():
+            readmitted = fleet.router.readmitted
+            print(f"[chaos] stale lease detected, {sigkilled} dead "
+                  f"({readmitted} re-admitted)")
+            sigkilled = None
+        elif time.perf_counter() > deadline:
+            raise RuntimeError(f"stale lease for {sigkilled} never "
+                               f"detected within 30s")
+        else:
+            time.sleep(0.05)
+    responses = [h.result(120) for h in handles]
+    return time.perf_counter() - t0, responses, sheds, readmitted, accepted
 
 
-def report(label, wall, latencies, sheds, fleet):
-    lat = np.asarray(latencies)
+def report(label, wall, responses, sheds, fleet):
+    lat = np.asarray([r.timing["latency_s"] for r in responses])
     s = fleet.stats()
     served, shed_n = len(lat), sum(sheds.values())
     print(f"[{label}] {served} served, {shed_n} shed in {wall:.2f}s "
@@ -129,7 +174,9 @@ def chaos_summary(fleet, sheds) -> None:
                      if k.startswith("difet.router.shed.")}
     print(f"  sheds by reason: {shed_counters or dict(sheds) or '{}'}")
     print(f"  re-admissions: {int(m.get('difet.router.readmitted', 0))}  "
-          f"replicas dead: {int(m.get('difet.fleet.replicas_dead', 0))}")
+          f"replicas dead: {int(m.get('difet.fleet.replicas_dead', 0))}  "
+          f"stale-lease deaths: "
+          f"{int(m.get('difet.fleet.stale_lease_deaths', 0))}")
     dh = m.get("difet.cache.disk_hits", 0)
     dm = m.get("difet.cache.disk_misses", 0)
     rate = dh / (dh + dm) if (dh + dm) else 0.0
@@ -139,51 +186,72 @@ def chaos_summary(fleet, sheds) -> None:
 
 
 def smoke(args) -> int:
-    """CI smoke: 2 replicas, short trace with a mid-trace replica kill;
-    assert zero accepted-request loss, bounded shed rate, and bit-parity
-    with the direct (unrouted) engine.  Non-zero exit on failure."""
-    import functools
-    import jax
-    from repro.core import engine
+    """CI smoke: short trace with a mid-trace replica kill; assert zero
+    accepted-request loss, bounded shed rate, and bit-parity of *every*
+    served response against a direct (unrouted) oracle service — which
+    is exactly "bit-identical to a no-kill run", since the oracle never
+    sees the kill.  With ``--proc`` the kill is a raw ``kill -9``
+    detected via the stale lease, and the smoke additionally asserts
+    the stale-lease path (not the cooperative kill) did the detection.
+    Non-zero exit on failure."""
+    import dataclasses
 
-    args.replicas = 2
-    args.requests = max(32, min(args.requests, 48))
+    from repro.serve.api import FeatureService
+
+    args.requests = max(32, min(args.requests, 64))
+    if args.proc:
+        # tight lease so stale detection lands inside the smoke window
+        args.lease_ttl = min(args.lease_ttl, 1.0)
     fleet = build_fleet(args)
     tcfg = trace_config(args)
     trace, pool = make_trace(tcfg), tile_pool(tcfg)
     failures = []
 
-    wall, lat, sheds, _ = replay(fleet, trace, pool,
-                                 kill_after=args.requests // 2)
-    served, shed_n = len(lat), sum(sheds.values())
+    kill_after = args.kill_after or args.requests // 2
+    wall, responses, sheds, readmitted, accepted = replay(
+        fleet, trace, pool, kill_after=kill_after)
+    served, shed_n = len(responses), sum(sheds.values())
     if served + shed_n != len(trace):
         failures.append(f"lost requests: {served} served + {shed_n} shed "
                         f"!= {len(trace)} injected")
     if served < 0.9 * len(trace):
         failures.append(f"shed rate {shed_n / len(trace):.2%} > 10%")
+    if args.proc:
+        m = obs_metrics.registry().snapshot()
+        if int(m.get("difet.fleet.stale_lease_deaths", 0)) < 1:
+            failures.append("kill -9 was not detected via the stale "
+                            "lease path")
 
-    # parity: routed result == direct extract_features_multi, bit-identical
-    ev = trace[0]
-    svc = next(iter(fleet.router._slots.values())).service
-    bucket = svc.table.interiors[0]
-    tile, header = svc.table.pad_to_bucket(pool[ev.pool_key], bucket)
-    direct = jax.jit(functools.partial(
-        engine.extract_features_multi, algorithms=ev.algorithms,
-        cfg=svc.table.cfg_for(bucket)))(tile[None], header[None])
-    routed = fleet.extract(pool[ev.pool_key], ev.algorithms,
-                           scene_key=scene_key(ev), timeout=60).results
-    for alg in ev.algorithms:
-        for k, v in direct[alg].items():
-            a, b = np.asarray(v), routed[alg][k]
-            if a.shape != b.shape or not np.array_equal(a, b):
-                failures.append(f"parity mismatch {alg}/{k}")
+    # parity: every served response == the direct (no-kill) oracle,
+    # bit-identical — accepted requests survived the kill unchanged
+    oracle = FeatureService(
+        dataclasses.replace(fleet.cfg.serve, cache_dir=None),
+        name="smoke-oracle")
+    checked = 0
+    for ev, resp in zip(accepted, responses):
+        want = oracle.submit(pool[ev.pool_key], resp.algorithms,
+                             block=True).result(60).results
+        for alg in resp.algorithms:
+            for k, v in want[alg].items():
+                b = resp.results[alg][k]
+                if np.asarray(v).shape != b.shape \
+                        or not np.array_equal(v, b):
+                    failures.append(f"parity mismatch req={resp.request_id}"
+                                    f" {alg}/{k}")
+        checked += 1
+        if checked >= 16:                 # bounded oracle cost
+            break
+    oracle.close()
 
-    report("fleet-smoke", wall, lat, sheds, fleet)
+    report("fleet-smoke", wall, responses, sheds, fleet)
+    chaos_summary(fleet, sheds)
     fleet.close()
     if failures:
         print("FLEET SMOKE FAILED:", "; ".join(failures))
         return 1
-    print("fleet smoke ok")
+    print(f"fleet smoke ok ({'proc' if args.proc else 'thread'} mode, "
+          f"{served} served, {readmitted} re-admitted, "
+          f"{checked} parity-checked)")
     return 0
 
 
@@ -209,8 +277,12 @@ def main(argv=None):
     ap.add_argument("--cache-dir", default=None,
                     help="shared disk cache tier (temp dir by default)")
     ap.add_argument("--lease-ttl", type=float, default=5.0)
+    ap.add_argument("--proc", action="store_true",
+                    help="spawn replicas as OS processes (serve/proc.py)")
+    ap.add_argument("--slo-ms", type=float, default=500.0,
+                    help="p99 admission-to-completion SLO for the autoscaler")
     ap.add_argument("--autoscale", action="store_true",
-                    help="run the queue-driven autoscaler during replay")
+                    help="run the SLO-driven autoscaler during replay")
     ap.add_argument("--kill-after", type=int, default=0,
                     help="chaos: kill one replica after N accepted requests")
     ap.add_argument("--seed", type=int, default=0)
@@ -226,12 +298,12 @@ def main(argv=None):
         fleet.start_autoscaler()
     tcfg = trace_config(args)
     trace, pool = make_trace(tcfg), tile_pool(tcfg)
-    wall, lat, sheds, _ = replay(fleet, trace, pool,
-                                 kill_after=args.kill_after)
-    stats = report("fleet", wall, lat, sheds, fleet)
-    fleet.close()
+    wall, responses, sheds, _, _ = replay(fleet, trace, pool,
+                                          kill_after=args.kill_after)
+    stats = report("fleet", wall, responses, sheds, fleet)
     if args.kill_after:
         chaos_summary(fleet, sheds)
+    fleet.close()
     return stats
 
 

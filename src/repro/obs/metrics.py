@@ -144,17 +144,11 @@ class Histogram:
         for v in vs:
             self.observe(v)
 
-    def quantile(self, q: float) -> float:
-        """Estimate the ``q``-quantile (0..1) by linear interpolation in
-        the crossing bucket; 0.0 on an empty histogram."""
-        if not 0.0 <= q <= 1.0:
-            raise ValueError(f"quantile {q} outside [0, 1]")
-        with self._lock:
-            total = self.count
-            if total == 0:
-                return 0.0
-            counts = list(self._counts)
-            vmin, vmax = self.min, self.max
+    def _interpolate(self, counts: Sequence[int], total: int, q: float,
+                     vmin: float, vmax: float) -> float:
+        """Cumulative-count walk + linear interpolation over an arbitrary
+        per-bucket count vector (the lifetime counts for `quantile`, a
+        count *delta* for `quantile_since`)."""
         rank = q * total
         cum = 0.0
         for i, c in enumerate(counts):
@@ -170,6 +164,46 @@ class Histogram:
                 return lo + frac * (hi - lo)
             cum += c
         return vmax
+
+    def quantile(self, q: float) -> float:
+        """Estimate the ``q``-quantile (0..1) by linear interpolation in
+        the crossing bucket; 0.0 on an empty histogram."""
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"quantile {q} outside [0, 1]")
+        with self._lock:
+            total = self.count
+            if total == 0:
+                return 0.0
+            counts = list(self._counts)
+            vmin, vmax = self.min, self.max
+        return self._interpolate(counts, total, q, vmin, vmax)
+
+    def counts(self) -> Tuple[int, ...]:
+        """Immutable per-bucket count snapshot (overflow bucket last) —
+        the *baseline* for :meth:`quantile_since` windowed reads."""
+        with self._lock:
+            return tuple(self._counts)
+
+    def quantile_since(self, baseline: Sequence[int],
+                       q: float) -> Optional[float]:
+        """Windowed quantile: the ``q``-quantile of only the observations
+        recorded *since* ``baseline`` (a prior :meth:`counts` snapshot).
+        Returns None when the window is empty — the SLO autoscaler's
+        "no recent traffic" signal.  Interpolation is clamped by the
+        lifetime min/max (the windowed extrema aren't tracked), so the
+        error stays within one bucket width."""
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"quantile {q} outside [0, 1]")
+        with self._lock:
+            cur = list(self._counts)
+            vmin, vmax = self.min, self.max
+        if len(baseline) != len(cur):
+            raise ValueError("baseline shape mismatch (different bounds?)")
+        window = [max(0, c - b) for c, b in zip(cur, baseline)]
+        total = sum(window)
+        if total == 0:
+            return None
+        return self._interpolate(window, total, q, vmin, vmax)
 
     @property
     def mean(self) -> float:

@@ -37,7 +37,6 @@ import io
 import json
 import threading
 import time
-from concurrent.futures import InvalidStateError as futures_InvalidStateError
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
@@ -465,11 +464,9 @@ class FeatureService:
                                     parent_id=batch_span or "",
                                     replica=self.name, bucket=bucket,
                                     batch_size=len(items))
-            if not it.future.done():               # kill() may have failed it
-                try:
-                    it.future.set_result((res, it.batch_size, completed_at))
-                except futures_InvalidStateError:
-                    pass                           # lost the race to kill()
+            # first-wins settle: a concurrent kill() may have failed this
+            # item already (serve/scheduler.py::WorkItem.resolve)
+            it.resolve((res, it.batch_size, completed_at))
         self.busy_s += time.monotonic() - t_start
         self.steps += 1
 

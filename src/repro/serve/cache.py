@@ -140,6 +140,7 @@ class DiskCacheTier:
         self.hits = 0
         self.misses = 0
         self.inserts = 0
+        self.errors = 0            # failed writes (partitioned/full disk)
         self._lock = threading.Lock()
         # disk-tier I/O latency histograms (bounded; shared across every
         # tier instance so the per-run breakdown aggregates the fleet)
@@ -148,6 +149,7 @@ class DiskCacheTier:
         self._m_write_s = _reg.histogram("difet.cache.disk_write_s")
         self._m_hits = _reg.counter("difet.cache.disk_hits")
         self._m_misses = _reg.counter("difet.cache.disk_misses")
+        self._m_errors = _reg.counter("difet.cache.disk_errors")
 
     def path_for(self, key) -> Path:
         """Deterministic entry path for a cache key (any tuple of
@@ -194,10 +196,15 @@ class DiskCacheTier:
         return out
 
     def put(self, key, value: Dict[str, np.ndarray]) -> None:
-        """Write-through one frozen feature dict (atomic rename)."""
+        """Write-through one frozen feature dict (atomic rename).
+
+        A failed write — partitioned/unwritable directory, full disk —
+        is *absorbed*, not raised: the tier is a performance layer, and
+        a replica that can't reach it must degrade to recomputing, never
+        crash mid-request (the cache-partition chaos test drives this).
+        Failures count in ``errors`` / ``difet.cache.disk_errors``."""
         t0 = time.monotonic()
         path = self.path_for(key)
-        path.parent.mkdir(parents=True, exist_ok=True)
         buf = io.BytesIO()
         # savez silently promotes 0-d arrays on round trip via indexing
         # conventions elsewhere; tag them so get() restores exact shape
@@ -205,8 +212,19 @@ class DiskCacheTier:
                          np.asarray(v) for k, v in value.items()})
         tmp = path.with_suffix(
             f".tmp.{os.getpid()}.{threading.get_ident()}")
-        tmp.write_bytes(buf.getvalue())
-        tmp.replace(path)
+        try:
+            path.parent.mkdir(parents=True, exist_ok=True)
+            tmp.write_bytes(buf.getvalue())
+            tmp.replace(path)
+        except OSError:
+            with self._lock:
+                self.errors += 1
+            self._m_errors.inc()
+            try:
+                tmp.unlink()                    # never leave a torn tmp
+            except OSError:
+                pass
+            return
         with self._lock:
             self.inserts += 1
         t1 = time.monotonic()
@@ -221,7 +239,7 @@ class DiskCacheTier:
     def stats(self) -> Dict[str, float]:
         with self._lock:
             return {"hits": self.hits, "misses": self.misses,
-                    "inserts": self.inserts}
+                    "inserts": self.inserts, "errors": self.errors}
 
 
 class TieredResultCache:

@@ -2,12 +2,17 @@
 :class:`serve/router.py::Router`.
 
 This is the layer the ROADMAP calls "the fleet a load balancer would
-replicate": each replica is an independent `serve/api.py::FeatureService`
-(its own continuous-batching scheduler, compile cache, and local result
-LRU), all sharing one on-disk result tier (``cache_dir`` →
-`serve/cache.py::TieredResultCache`, so a computation on any replica
-warms every replica) and one scene registry (broadcast on
-``register_scene``).
+replicate".  Replicas come in two kinds:
+
+* **thread** (default): an in-process `serve/api.py::FeatureService`
+  (its own continuous-batching scheduler, compile cache, local result
+  LRU) — cheap, shares the heap, the unit-test and benchmark workhorse.
+* **process** (``FleetConfig.proc=True``): a `serve/proc.py` worker
+  spawned as an OS process, driven through the spooled-file transport
+  (`serve/transport.py`).  Nothing is shared but what a distributed
+  worker would actually share: the on-disk result tier
+  (`serve/cache.py::DiskCacheTier`), `LeaseBoard` lease files, and the
+  mailbox directory.  ``kill -9`` is a real SIGKILL.
 
 Replica lifecycle::
 
@@ -15,36 +20,46 @@ Replica lifecycle::
                    │        │
                    │        └─ kill / stale lease → DEAD (chaos path)
                    └─ warm-up pre-compiles every (bucket, algorithm-set)
-                      program (`serve/buckets.py::warmup` via
-                      ``FeatureService.warmup``) before the replica joins
-                      the ring — a new replica never serves a compile
-                      stall to live traffic.
+                      program before the replica joins the ring — a new
+                      replica never serves a compile stall to traffic.
 
-Liveness rides the elastic-job machinery from `core/job.py`: every
-replica holds a :class:`LeaseBoard` lease under its own name, refreshed
-by the fleet's maintenance tick *only while the replica's runner thread
-is alive* — a crashed runner stops refreshing, the lease goes stale, and
-the next tick declares the replica DEAD and re-admits its in-flight work
-through the router (`Router.readmit`).  ``kill_replica`` is the same
-path taken eagerly (chaos tests).
+Liveness rides `core/job.py::LeaseBoard` leases under each replica's
+name.  Thread replicas are heartbeaten by the fleet's maintenance tick
+*only while their runner thread is alive*; process replicas heartbeat
+**themselves** — the parent never refreshes a worker's lease, so a
+SIGKILL stops the heartbeat at the same instant it stops the work and
+the next maintenance tick past the TTL declares the replica DEAD and
+re-admits its outstanding requests through `Router.readmit`
+(bit-identically — extraction is deterministic).
 
-Autoscaling is queue-driven: each ``autoscale_tick`` compares the
-fleet-wide pending depth per READY replica against high/low watermarks —
-scale *up* immediately (spawn + warm + join), scale *down* only after
-``scale_down_grace_ticks`` consecutive idle ticks (hysteresis), and only
-by *draining*: the replica leaves the ring, finishes its queue, retires
-with zero dropped responses.
+Autoscaling is SLO-driven: the controller reads the windowed p99 of
+``difet.fleet.request_latency_s`` (admission → work completion, the
+histogram `serve/router.py` feeds) between ticks and scales **up** when
+it breaches ``slo_p99_s``; fleet queue depth per replica is kept as a
+fast-path up-trigger (a saturated queue predicts the breach before
+enough completions exist to measure it).  Scale **down** only happens
+when the window's p99 is comfortably under the SLO *and* queues are
+shallow for ``scale_down_grace_ticks`` consecutive ticks, and only by
+*draining*: the replica leaves the ring, finishes its queue, retires
+with zero dropped responses.  Every decision is recorded in
+``Fleet.scale_events`` (trigger metric, value, before/after replica
+count) — `benchmarks/bench_fleet.py` copies them into the
+``BENCH_<rev>.json`` snapshot.
 """
 from __future__ import annotations
 
 import dataclasses
 import tempfile
 import threading
-from typing import Dict, Optional, Sequence, Tuple
+import time
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.job import LeaseBoard
 from repro.obs import metrics as obs_metrics
+from repro.serve import chaos
 from repro.serve.api import FeatureService, ServeConfig
+from repro.serve.proc import ProcReplicaClient
 from repro.serve.router import Router, RouterConfig
 
 __all__ = ["FleetConfig", "Fleet", "Replica",
@@ -65,13 +80,19 @@ class FleetConfig:
     ``cache_dir`` is overridden with the fleet's shared ``cache_dir``
     when set); ``router`` configures admission + routing.
 
-    Autoscaling: scale up when fleet queue depth per READY replica
-    exceeds ``scale_up_queue_per_replica`` (and the pool is below
-    ``max_replicas``); scale down after ``scale_down_grace_ticks``
-    consecutive ticks below ``scale_down_queue_per_replica`` (and above
-    ``min_replicas``).  ``lease_ttl_s`` bounds crash-detection latency:
-    a replica whose runner died is declared DEAD once its lease is this
-    stale."""
+    ``proc=True`` spawns replicas as OS processes (`serve/proc.py`)
+    with mailboxes under ``transport_dir``; workers heartbeat their own
+    leases every ``heartbeat_interval_s``.  ``lease_ttl_s`` bounds
+    crash-detection latency: a replica that stops heartbeating is
+    declared DEAD once its lease is this stale.
+
+    SLO autoscaling: scale up when the windowed p99 of
+    ``difet.fleet.request_latency_s`` exceeds ``slo_p99_s`` (or, fast
+    path, when fleet queue depth per READY replica exceeds
+    ``scale_up_queue_per_replica``); scale down — by draining — after
+    ``scale_down_grace_ticks`` consecutive ticks with p99 below
+    ``slo_p99_s * slo_scale_down_factor`` (an empty window counts as
+    satisfied) and queues below ``scale_down_queue_per_replica``."""
     serve: ServeConfig = ServeConfig()
     router: RouterConfig = RouterConfig()
     initial_replicas: int = 2
@@ -81,6 +102,14 @@ class FleetConfig:
     cache_dir: Optional[str] = None       # shared result tier (all replicas)
     lease_dir: Optional[str] = None       # liveness leases (temp dir default)
     lease_ttl_s: float = 5.0
+    # process-mode knobs
+    proc: bool = False
+    transport_dir: Optional[str] = None   # worker mailboxes (temp dir default)
+    heartbeat_interval_s: float = 0.2
+    worker_ready_timeout_s: float = 180.0
+    # SLO autoscaler policy
+    slo_p99_s: float = 0.5
+    slo_scale_down_factor: float = 0.5
     scale_up_queue_per_replica: float = 16.0
     scale_down_queue_per_replica: float = 2.0
     scale_down_grace_ticks: int = 3
@@ -88,23 +117,36 @@ class FleetConfig:
 
 
 class Replica:
-    """One pool member: the service plus its lifecycle state."""
+    """One pool member: the service (or process-replica client) plus its
+    lifecycle state and kind (``"thread"`` | ``"proc"``)."""
 
-    def __init__(self, name: str, service: FeatureService):
+    def __init__(self, name: str, service, kind: str = "thread"):
         self.name = name
         self.service = service
+        self.kind = kind
         self.state = SPAWNING
 
     def runner_alive(self) -> bool:
-        """Is the replica's scheduler runner thread still running?  The
-        signal the maintenance tick gates heartbeats on — a dead runner
-        stops heartbeating and the lease goes stale."""
+        """Is the replica's execution vehicle still running — the
+        scheduler runner thread (thread kind) or the worker process
+        (proc kind)?  Thread replicas are heartbeaten by the fleet only
+        while this holds; proc replicas heartbeat themselves, so for
+        them this is zombie-reaping ground truth, not liveness."""
+        if self.kind == "proc":
+            return self.service.alive()
         return self.service.scheduler._thread.is_alive()
 
 
 class Fleet:
     """The replica pool (see module docstring).  ``fleet.router`` is the
-    client-facing submit surface; the fleet itself manages membership."""
+    client-facing submit surface; the fleet itself manages membership.
+
+    ``scale_events`` is the audit log of every autoscale decision:
+    ``{"action", "trigger", "value", "slo_p99_s", "before", "after"}``
+    dicts in decision order (bounded; benchmarks snapshot it into
+    ``BENCH_<rev>.json``)."""
+
+    MAX_SCALE_EVENTS = 256
 
     def __init__(self, cfg: Optional[FleetConfig] = None, *,
                  step_lock: Optional[threading.Lock] = None):
@@ -112,10 +154,15 @@ class Fleet:
         self.router = Router(self.cfg.router)
         lease_dir = self.cfg.lease_dir or tempfile.mkdtemp(
             prefix="difet-fleet-leases-")
+        self.lease_dir = Path(lease_dir)
         self.leases = LeaseBoard(lease_dir, ttl_s=self.cfg.lease_ttl_s)
+        self.transport_dir = Path(
+            self.cfg.transport_dir or tempfile.mkdtemp(
+                prefix="difet-fleet-mbox-")) if self.cfg.proc else None
         self._step_lock = step_lock
         self._lock = threading.RLock()
         self.replicas: Dict[str, Replica] = {}
+        self.scale_events: List[Dict[str, object]] = []
         self._counter = 0
         self._idle_ticks = 0
         self._scenes: Dict[str, object] = {}
@@ -126,9 +173,22 @@ class Fleet:
         self._m_scale_up = _reg.counter("difet.fleet.scale_up")
         self._m_scale_down = _reg.counter("difet.fleet.scale_down")
         self._m_dead = _reg.counter("difet.fleet.replicas_dead")
+        self._m_stale = _reg.counter("difet.fleet.stale_lease_deaths")
         self._g_ready = _reg.gauge("difet.fleet.ready_replicas")
-        for _ in range(self.cfg.initial_replicas):
-            self.spawn_replica()
+        # SLO controller state: windowed p99 over the router-fed
+        # admission→completion histogram, baselined each tick
+        self._lat_hist = _reg.histogram("difet.fleet.request_latency_s")
+        self._lat_baseline = self._lat_hist.counts()
+        if self.cfg.proc:
+            # parallel spawn: launch every worker first (they warm
+            # concurrently — jax import + compile dominates), then wait
+            reps = [self._launch_proc()
+                    for _ in range(self.cfg.initial_replicas)]
+            for rep in reps:
+                self._finalize_proc(rep)
+        else:
+            for _ in range(self.cfg.initial_replicas):
+                self.spawn_replica()
 
     # ---- lifecycle ----------------------------------------------------------
     def _serve_cfg(self) -> ServeConfig:
@@ -137,10 +197,37 @@ class Fleet:
                                        cache_dir=self.cfg.cache_dir)
         return self.cfg.serve
 
+    def _launch_proc(self) -> Replica:
+        with self._lock:
+            self._counter += 1
+            name = f"replica-{self._counter}"
+            client = ProcReplicaClient.spawn(
+                name, self.transport_dir / name, self._serve_cfg(),
+                self.lease_dir,
+                lease_ttl_s=self.cfg.lease_ttl_s,
+                heartbeat_interval_s=self.cfg.heartbeat_interval_s,
+                warm_algorithm_sets=self.cfg.warm_algorithm_sets)
+            rep = Replica(name, client, kind="proc")
+            self.replicas[name] = rep
+        rep.state = WARMING
+        return rep
+
+    def _finalize_proc(self, rep: Replica) -> str:
+        rep.service.wait_ready(self.cfg.worker_ready_timeout_s)
+        for scene_name, image in self._scenes.items():
+            rep.service.register_scene(scene_name, image)
+        rep.state = READY
+        self.router.add_replica(rep.name, rep.service)
+        self._g_ready.set(len(self.ready_replicas()))
+        return rep.name
+
     def spawn_replica(self) -> str:
-        """SPAWNING → WARMING → READY: build a service, pre-compile its
-        programs, take a liveness lease, join the ring.  Returns the
-        replica name (``replica-N``)."""
+        """SPAWNING → WARMING → READY: build a service (or launch a
+        worker process), pre-compile its programs, establish its
+        liveness lease, join the ring.  Returns the replica name
+        (``replica-N``)."""
+        if self.cfg.proc:
+            return self._finalize_proc(self._launch_proc())
         with self._lock:
             self._counter += 1
             name = f"replica-{self._counter}"
@@ -174,9 +261,10 @@ class Fleet:
         self._g_ready.set(len(self.ready_replicas()))
 
     def kill_replica(self, name: str) -> int:
-        """Chaos: crash a replica mid-flight.  Its queued + on-device
-        items fail with ``ReplicaDied`` and are immediately re-admitted to
-        the survivors; returns how many requests were re-admitted."""
+        """Chaos: crash a replica mid-flight (thread: fail its futures;
+        proc: real SIGKILL).  Its in-flight work is immediately
+        re-admitted to the survivors; returns the router's cumulative
+        re-admission count."""
         with self._lock:
             rep = self.replicas.get(name)
             if rep is None or rep.state in (RETIRED, DEAD):
@@ -189,6 +277,20 @@ class Fleet:
         self._g_ready.set(len(self.ready_replicas()))
         return self.router.readmitted
 
+    def sigkill_replica(self, name: str) -> int:
+        """Chaos, the *uncooperative* variant for process replicas: raw
+        ``kill -9`` to the worker pid and nothing else — no state change,
+        no router removal, no lease release.  Detection is entirely the
+        maintenance tick's job (stale lease after ``lease_ttl_s``), which
+        is the path a real worker crash takes.  Returns the pid killed."""
+        with self._lock:
+            rep = self.replicas.get(name)
+        if rep is None or rep.kind != "proc":
+            raise ValueError(f"{name} is not a process replica")
+        pid = rep.service.pid
+        chaos.sigkill(pid)
+        return pid
+
     # ---- liveness + autoscaling ---------------------------------------------
     def ready_replicas(self) -> Tuple[str, ...]:
         """Names of replicas currently in the READY state."""
@@ -197,15 +299,34 @@ class Fleet:
                          if r.state == READY)
 
     def maintenance_tick(self) -> Sequence[str]:
-        """Heartbeat live replicas; declare DEAD (and re-admit the work
-        of) any READY replica whose runner died and lease went stale.
+        """Liveness pass.  Thread replicas: heartbeat their lease while
+        the runner thread lives; declare DEAD when the runner died *and*
+        the lease went stale.  Process replicas: never heartbeaten here
+        (the worker refreshes its own lease), so a stale lease alone —
+        SIGKILL, hung worker, stalled heartbeat — declares them DEAD,
+        reaps any zombie process, and re-admits their outstanding work.
         Returns the names declared dead this tick."""
         died = []
         with self._lock:
             candidates = [(n, r) for n, r in self.replicas.items()
                           if r.state in (READY, DRAINING)]
         for name, rep in candidates:
-            if rep.runner_alive():
+            if rep.kind == "proc":
+                if self.leases.fresh(name):
+                    continue
+                with self._lock:
+                    if rep.state == DEAD:
+                        continue
+                    rep.state = DEAD
+                rep.service.mark_dead()
+                if rep.service.alive():
+                    chaos.sigkill(rep.service.pid)   # reap the zombie
+                self.router.remove_replica(name, died=True)
+                self.leases.release(name, name)
+                self._m_dead.inc()
+                self._m_stale.inc()
+                died.append(name)
+            elif rep.runner_alive():
                 self.leases.acquire(name, name)      # refresh own lease
             elif not self.leases.fresh(name):
                 with self._lock:
@@ -220,25 +341,65 @@ class Fleet:
             self._g_ready.set(len(self.ready_replicas()))
         return died
 
+    def _record_scale(self, action: str, trigger: str, value: float,
+                      before: int, after: int) -> None:
+        event = {"action": action, "trigger": trigger,
+                 "value": float(value), "slo_p99_s": self.cfg.slo_p99_s,
+                 "before": int(before), "after": int(after),
+                 "t": time.time()}
+        with self._lock:
+            self.scale_events.append(event)
+            del self.scale_events[:-self.MAX_SCALE_EVENTS]
+        obs_metrics.registry().counter(
+            f"difet.fleet.{action}.{trigger}").inc()
+
     def autoscale_tick(self) -> str:
-        """One scaling decision from live queue stats (pure policy — the
-        background loop and the tests both call this).  Returns the action
+        """One SLO-controller decision (pure policy — the background
+        loop and the tests both call this).  Reads the windowed p99 of
+        admission→completion latency since the previous tick (harvesting
+        done-but-uncollected requests first so open-loop clients count),
+        plus queue depth as the fast-path up-trigger.  Returns the action
         taken: ``"scale_up:<name>"``, ``"scale_down:<name>"``, or
-        ``"hold"``."""
+        ``"hold"`` — and records non-hold decisions in
+        ``scale_events``."""
+        self.router.harvest_latencies()
+        p99 = self._lat_hist.quantile_since(self._lat_baseline, 0.99)
+        self._lat_baseline = self._lat_hist.counts()
         ready = self.ready_replicas()
         if not ready:
             if len(self.replicas) < self.cfg.max_replicas:
+                before = 0
+                name = self.spawn_replica()
                 self._m_scale_up.inc()
-                return f"scale_up:{self.spawn_replica()}"
+                self._record_scale("scale_up", "no_ready_replica", 0.0,
+                                   before, len(self.ready_replicas()))
+                return f"scale_up:{name}"
             return "hold"
         depth = self.router.total_pending()
         per_replica = depth / len(ready)
-        if (per_replica > self.cfg.scale_up_queue_per_replica
-                and len(ready) < self.cfg.max_replicas):
-            self._idle_ticks = 0
-            self._m_scale_up.inc()
-            return f"scale_up:{self.spawn_replica()}"
-        if per_replica < self.cfg.scale_down_queue_per_replica:
+        if len(ready) < self.cfg.max_replicas:
+            # SLO breach: measured p99 over the SLO target
+            if p99 is not None and p99 > self.cfg.slo_p99_s:
+                self._idle_ticks = 0
+                before = len(ready)
+                name = self.spawn_replica()
+                self._m_scale_up.inc()
+                self._record_scale("scale_up", "p99_latency", p99,
+                                   before, len(self.ready_replicas()))
+                return f"scale_up:{name}"
+            # fast path: a deep queue predicts the breach before enough
+            # completions exist to measure it
+            if per_replica > self.cfg.scale_up_queue_per_replica:
+                self._idle_ticks = 0
+                before = len(ready)
+                name = self.spawn_replica()
+                self._m_scale_up.inc()
+                self._record_scale("scale_up", "queue_depth", per_replica,
+                                   before, len(self.ready_replicas()))
+                return f"scale_up:{name}"
+        slo_ok = (p99 is None
+                  or p99 < self.cfg.slo_p99_s * self.cfg.slo_scale_down_factor)
+        if slo_ok and per_replica < self.cfg.scale_down_queue_per_replica:
             self._idle_ticks += 1
             if (self._idle_ticks >= self.cfg.scale_down_grace_ticks
                     and len(ready) > self.cfg.min_replicas):
@@ -247,8 +408,12 @@ class Fleet:
                 # drain); ties break on name for determinism
                 name = min(ready, key=lambda n: (
                     self.replicas[n].service.scheduler.queue_depth, n))
+                before = len(ready)
                 self.drain_replica(name)
                 self._m_scale_down.inc()
+                self._record_scale("scale_down", "slo_satisfied",
+                                   p99 if p99 is not None else 0.0,
+                                   before, len(self.ready_replicas()))
                 return f"scale_down:{name}"
         else:
             self._idle_ticks = 0
@@ -299,16 +464,19 @@ class Fleet:
                 rep.service.register_scene(name, image)
 
     def stats(self) -> Dict[str, object]:
-        """Router aggregate + per-replica lifecycle states."""
+        """Router aggregate + per-replica lifecycle states + the
+        autoscaler's decision log."""
         s = self.router.stats()
         with self._lock:
             s["states"] = {n: r.state for n, r in self.replicas.items()}
+            s["scale_events"] = [dict(e) for e in self.scale_events]
         s["ready"] = sum(1 for v in s["states"].values() if v == READY)
         return s
 
     def close(self, timeout: float = 60.0) -> None:
-        """Shut the fleet down: stop the autoscaler, stop admitting, and
-        drain every replica (accepted work completes)."""
+        """Shut the fleet down: stop the autoscaler, stop admitting,
+        drain every live replica (accepted work completes), and reap any
+        dead worker processes."""
         self._stop.set()
         if self._autoscaler is not None:
             self._autoscaler.join(self.cfg.autoscale_interval_s + 5.0)
@@ -316,3 +484,8 @@ class Fleet:
         self.router.close()
         for name in list(self.replicas):
             self.drain_replica(name, timeout)
+        with self._lock:
+            reps = list(self.replicas.values())
+        for rep in reps:
+            if rep.kind == "proc" and rep.service.alive():
+                chaos.sigkill(rep.service.pid)

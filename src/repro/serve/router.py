@@ -183,7 +183,7 @@ class _FleetRequest:
 
     def __init__(self, rid: str, image, algorithms, tenant: str,
                  route_key: str, replica: str, handle,
-                 trace_id: str = ""):
+                 trace_id: str = "", admitted_at: float = 0.0):
         self.rid = rid
         self.image = image
         self.algorithms = algorithms
@@ -192,6 +192,8 @@ class _FleetRequest:
         self.replica = replica
         self.handle = handle
         self.trace_id = trace_id
+        self.admitted_at = admitted_at   # wall clock at admission (SLO base)
+        self.latency_observed = False    # each request counts once
         self.generation = 0
         self.error: Optional[BaseException] = None
 
@@ -235,7 +237,8 @@ class FleetHandle:
                 resp = inner.result(rem)
             except ReplicaDied:
                 # our replica was killed: wait for the router to re-admit
-                # (it does so synchronously on kill, so this is brief)
+                # (the fleet's maintenance tick does so as soon as the
+                # stale lease is detected, so this is one TTL at worst)
                 with self._router._cv:
                     while (self._req.generation == gen
                            and self._req.error is None):
@@ -247,6 +250,7 @@ class FleetHandle:
                                 f"waiting for re-admission")
                         self._router._cv.wait(rem)
                 continue
+            self._router._observe_latency(self._req, resp)
             self._router._complete(self._req.rid)
             return resp
 
@@ -278,6 +282,9 @@ class Router:
         self._m_readmitted = _reg.counter("difet.router.readmitted")
         self._m_affinity = _reg.counter("difet.router.routed_affinity")
         self._m_spill = _reg.counter("difet.router.routed_spill")
+        # admission → work-completion latency, the SLO the fleet
+        # autoscaler controls on (`serve/fleet.py::Fleet.autoscale_tick`)
+        self._m_latency = _reg.histogram("difet.fleet.request_latency_s")
 
     # ---- pool membership (called by Fleet) ---------------------------------
     def add_replica(self, name: str, service: FeatureService) -> None:
@@ -408,6 +415,8 @@ class Router:
         tracing = obs_trace.enabled()
         tid = obs_trace.new_trace_id() if tracing else ""
         t_admit = time.monotonic() if tracing else 0.0
+        admitted_at = time.time()        # SLO latency base (wall clock,
+        #                                  comparable to timing["completed_at"])
         try:
             handle = slot.service.submit(image, algorithms,
                                          request_id=request_id, block=False,
@@ -434,7 +443,7 @@ class Router:
             req = _FleetRequest(rid, image, tuple(algorithms) if
                                 not isinstance(algorithms, str)
                                 else algorithms, tenant, key, name, handle,
-                                trace_id=tid)
+                                trace_id=tid, admitted_at=admitted_at)
             self._outstanding[rid] = req
             self.submitted += 1
             if spilled:
@@ -526,13 +535,53 @@ class Router:
 
     @staticmethod
     def _handle_failed(handle) -> bool:
-        """True iff a done replica-handle holds a ReplicaDied failure
-        (probe without blocking: every part future is done)."""
+        """True iff a done replica-handle holds a died-without-result
+        failure (probe without blocking).  Duck-typed over both replica
+        kinds: process handles (`serve/proc.py::ProcHandle`) expose
+        ``failed()`` directly; thread handles are probed through their
+        per-part futures."""
+        probe = getattr(handle, "failed", None)
+        if callable(probe):
+            return bool(probe())
         for p in handle._parts:
             if p.future is not None and p.future.done():
                 if p.future.exception() is not None:
                     return True
         return False
+
+    # ---- SLO latency ---------------------------------------------------------
+    def _observe_latency(self, req: _FleetRequest,
+                         resp: ExtractResponse) -> None:
+        """Record one admission→work-completion latency into the fleet
+        SLO histogram (idempotent per request — ``result()`` can be
+        called repeatedly and `harvest_latencies` races it benignly)."""
+        with self._cv:
+            if req.latency_observed or not req.admitted_at:
+                return
+            req.latency_observed = True
+        completed = resp.timing.get("completed_at") or time.time()
+        self._m_latency.observe(max(0.0, completed - req.admitted_at))
+
+    def harvest_latencies(self) -> int:
+        """Observe the latency of every *done but uncollected* request —
+        the autoscaler's view under open-loop clients that submit fast
+        and collect late (without this, p99 would only reflect requests
+        whose callers already drained them).  Returns how many were
+        harvested this call."""
+        with self._cv:
+            todo = [r for r in self._outstanding.values()
+                    if not r.latency_observed and r.error is None]
+        n = 0
+        for req in todo:
+            try:
+                if not req.handle.done() or self._handle_failed(req.handle):
+                    continue
+                resp = req.handle.result(0.05)
+            except Exception:  # noqa: BLE001 — died/raced: its turn comes later
+                continue
+            self._observe_latency(req, resp)
+            n += 1
+        return n
 
     def _complete(self, rid: str) -> None:
         with self._cv:

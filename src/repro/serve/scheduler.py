@@ -58,7 +58,15 @@ class ReplicaDied(RuntimeError):
 class WorkItem:
     """One tile awaiting a device step.  ``future`` resolves to the
     per-algorithm feature dict for this tile; ``digest``/``cfg_digest``
-    ride along so the runner can insert results into the result cache."""
+    ride along so the runner can insert results into the result cache.
+
+    Future resolution goes through :meth:`resolve`/:meth:`fail` only —
+    ``stop()``/``kill()`` race the in-flight ``_run_batch`` by design
+    (the kill path fails every active item while the runner may be
+    setting its result), and the old ad-hoc ``done()``-then-set guards
+    at each call site still allowed both sides to believe they won.
+    The settle flag makes first-wins explicit and auditable
+    (regression-tested in ``tests/test_serve.py``)."""
     seq: int
     tile: np.ndarray                 # [hw, hw] float32, bucket-padded
     header: np.ndarray               # [6] int32
@@ -71,10 +79,44 @@ class WorkItem:
     batch_size: int = 0              # filled by the runner
     completed_at: float = 0.0        # wall clock at batch completion (runner)
     trace_id: str = ""               # minted at router admission (obs/trace)
+    settled: bool = False            # first resolve/fail wins; rest no-op
+    _settle_lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False)
 
     @property
     def group_key(self) -> tuple:
         return (self.bucket, self.algorithms)
+
+    def _claim(self) -> bool:
+        with self._settle_lock:
+            if self.settled:
+                return False
+            self.settled = True
+            return True
+
+    def resolve(self, value) -> bool:
+        """Idempotently complete the item's future with ``value``;
+        returns True iff this call won the settle race (a concurrent
+        `fail` — e.g. ``kill()`` vs batch completion — is benign:
+        exactly one side wins)."""
+        if not self._claim():
+            return False
+        try:
+            self.future.set_result(value)
+        except InvalidStateError:      # future cancelled/settled externally
+            return False
+        return True
+
+    def fail(self, exc: BaseException) -> bool:
+        """Idempotently fail the item's future with ``exc``; returns
+        True iff this call won the settle race."""
+        if not self._claim():
+            return False
+        try:
+            self.future.set_exception(exc)
+        except InvalidStateError:
+            return False
+        return True
 
 
 class BatchScheduler:
@@ -194,11 +236,7 @@ class BatchScheduler:
                 self._run_batch(bucket, algorithms, batch)
             except BaseException as e:  # noqa: BLE001 — fail the batch, not the service
                 for it in batch:
-                    if not it.future.done():
-                        try:
-                            it.future.set_exception(e)
-                        except InvalidStateError:
-                            pass               # kill() won the race
+                    it.fail(e)                 # no-op if kill() already won
             finally:
                 with self._cv:
                     self._active = []
@@ -241,11 +279,7 @@ class BatchScheduler:
             # it died (deduped per reason inside dump_on)
             getattr(rec, "dump_on", lambda _r: None)("replica_died")
         for it in victims:
-            if not it.future.done():
-                try:
-                    it.future.set_exception(exc)
-                except InvalidStateError:
-                    pass                       # the batch finished first
+            it.fail(exc)                       # no-op if the batch finished first
 
     def stats(self) -> Dict[str, object]:
         """Counter snapshot: totals, queue depth, batch-size histogram /

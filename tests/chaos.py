@@ -1,0 +1,83 @@
+"""Reusable chaos/fault-injection harness for the fleet tests.
+
+The fault *primitives* live in the library (`repro/serve/chaos.py`) so
+that CI tests and the command-line chaos driver
+(``launch/fleet.py --kill-after``) exercise the same code paths; this
+module is the pytest-side veneer: it re-exports those primitives and
+adds the polling / parity helpers every chaos test needs.
+
+Fault surface (see each primitive's docstring):
+
+* ``sigkill(pid)``            — real ``kill -9``, no cleanup
+* ``cache_partition(path)``   — chmod-000 a shared directory for a block
+* ``tear_file(path)``         — truncate a committed file in place
+* ``ChaosPlan`` + ``write_plan``/``clear_plan`` — in-band worker faults
+  (stalled heartbeats, withheld responses, self-``kill -9`` after N
+  responses), re-read by the `serve/proc.py` worker every loop
+
+All faults are deterministic: tests pick the exact span where a fault
+lands, never a random schedule.
+"""
+import functools
+import time
+
+import numpy as np
+
+import jax
+
+from repro.configs.difet_paper import DifetConfig
+from repro.core import engine
+from repro.serve.api import FeatureService, ServeConfig
+from repro.serve.chaos import (ChaosPlan, cache_partition, clear_plan,  # noqa: F401
+                               read_plan, sigkill, tear_file, write_plan)
+
+__all__ = ["ChaosPlan", "write_plan", "read_plan", "clear_plan",
+           "sigkill", "cache_partition", "tear_file",
+           "wait_until", "direct_extract", "assert_results_equal"]
+
+
+def wait_until(pred, timeout: float = 10.0, interval: float = 0.02,
+               desc: str = "condition"):
+    """Poll ``pred`` until truthy; return its value.  Raises
+    ``AssertionError`` (not TimeoutError — this is a test harness) with
+    ``desc`` if the deadline passes first."""
+    deadline = time.monotonic() + timeout
+    while True:
+        val = pred()
+        if val:
+            return val
+        if time.monotonic() > deadline:
+            raise AssertionError(f"timed out after {timeout}s "
+                                 f"waiting for {desc}")
+        time.sleep(interval)
+
+
+def direct_extract(gray, algorithms=("harris",), *, base=None):
+    """Unrouted, unserved reference extraction: jitted
+    ``extract_features_multi`` on the bucket-padded tile.  Every chaos
+    test's parity oracle — a served/re-admitted/recovered result must
+    match this bitwise."""
+    base = base or DifetConfig(tile=32, halo=8, max_keypoints_per_tile=16)
+    svc = FeatureService(ServeConfig(base=base, buckets=(gray.shape[0],)))
+    try:
+        bucket = svc.table.bucket_for(*gray.shape)
+        tile, header = svc.table.pad_to_bucket(gray, bucket)
+        fn = jax.jit(functools.partial(engine.extract_features_multi,
+                                       algorithms=tuple(sorted(algorithms)),
+                                       cfg=svc.table.cfg_for(bucket)))
+        return {alg: {k: np.asarray(v) for k, v in res.items()}
+                for alg, res in fn(tile[None], header[None]).items()}
+    finally:
+        svc.close()
+
+
+def assert_results_equal(a, b):
+    """Bitwise parity over two per-algorithm feature dicts: same keys,
+    same shapes/dtypes, identical values."""
+    assert set(a) == set(b)
+    for alg in a:
+        assert set(a[alg]) == set(b[alg])
+        for k in a[alg]:
+            x, y = np.asarray(a[alg][k]), np.asarray(b[alg][k])
+            assert x.shape == y.shape and x.dtype == y.dtype, (alg, k)
+            assert np.array_equal(x, y), (alg, k)

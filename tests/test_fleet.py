@@ -28,7 +28,7 @@ BASE = DifetConfig(tile=32, halo=8, max_keypoints_per_tile=16)
 def fleet_cfg(n, *, cache_dir=None, lease_dir=None, lease_ttl_s=5.0,
               max_batch=4, max_pending=1024, cache_entries=0,
               max_batch_delay_s=0.005, min_replicas=1, max_replicas=None,
-              scale_up=16.0, scale_down=2.0, grace=3,
+              scale_up=16.0, scale_down=2.0, grace=3, slo_p99_s=0.5,
               router=None) -> FleetConfig:
     return FleetConfig(
         serve=ServeConfig(base=BASE, buckets=(32,), max_batch=max_batch,
@@ -42,6 +42,7 @@ def fleet_cfg(n, *, cache_dir=None, lease_dir=None, lease_ttl_s=5.0,
         cache_dir=str(cache_dir) if cache_dir else None,
         lease_dir=str(lease_dir) if lease_dir else None,
         lease_ttl_s=lease_ttl_s,
+        slo_p99_s=slo_p99_s,
         scale_up_queue_per_replica=scale_up,
         scale_down_queue_per_replica=scale_down,
         scale_down_grace_ticks=grace)
@@ -342,9 +343,12 @@ def test_stale_lease_detects_silent_crash_and_readmits(tmp_path):
 
 
 def test_autoscaler_scales_up_on_depth_and_down_after_grace():
+    # slo_p99_s=1e9 mutes the latency policy so only the queue-depth
+    # triggers are exercised (the SLO path has its own tests)
     step_lock = threading.Lock()
     fleet = Fleet(fleet_cfg(1, min_replicas=1, max_replicas=2,
-                            scale_up=4.0, scale_down=2.0, grace=2),
+                            scale_up=4.0, scale_down=2.0, grace=2,
+                            slo_p99_s=1e9),
                   step_lock=step_lock)
     try:
         # 12 tiles: the runner holds up to max_batch=4 in flight, so the

@@ -3,7 +3,9 @@ the registry, span tracing + flight recorder, exporters/validator, the
 kernel profiler, dispatch-cache provenance, and the end-to-end gates —
 trace-id continuity across a chaos kill, and traced-run bit-parity."""
 import json
+import os
 import threading
+from pathlib import Path
 
 import numpy as np
 import pytest
@@ -19,8 +21,12 @@ from repro.obs.trace import FlightRecorder, NoopRecorder, Span
 @pytest.fixture
 def flight(tmp_path):
     """Install a FlightRecorder (tracing ON) for the test, restore the
-    process default (noop) afterwards."""
-    rec = FlightRecorder(capacity=4096, dump_dir=str(tmp_path))
+    process default (noop) afterwards.  ``DIFET_CHAOS_DUMP_DIR``
+    redirects crash-dump artifacts to a stable path — CI sets it so a
+    failing chaos test leaves its Chrome trace behind for upload."""
+    dump_dir = os.environ.get("DIFET_CHAOS_DUMP_DIR", str(tmp_path))
+    Path(dump_dir).mkdir(parents=True, exist_ok=True)
+    rec = FlightRecorder(capacity=4096, dump_dir=dump_dir)
     prev = obs_trace.set_recorder(rec)
     yield rec
     obs_trace.set_recorder(prev)
@@ -454,3 +460,48 @@ def test_shed_counters_in_registry(fresh_registry):
         router.submit(np.zeros((32, 32), np.float32), ("harris",))
     snap = fresh_registry.snapshot()
     assert snap.get("difet.router.shed.no_ready_replica") == 1.0
+
+
+def test_trace_id_survives_process_kill_readmit(flight, tmp_path):
+    """The process-fleet variant of trace-id continuity: a replica
+    *process* is SIGKILLed holding outstanding work, the death is
+    discovered via the stale lease, and the router's `readmit` spans
+    carry the ORIGINAL admission-minted trace id — the request's
+    identity survives a real cross-process crash."""
+    from chaos import ChaosPlan, clear_plan, wait_until, write_plan
+    from repro.data.landsat import synthetic_scene
+    from repro.serve import Fleet
+    from repro.serve.fleet import DEAD
+    from test_proc_fleet import proc_fleet_cfg
+
+    fleet = Fleet(proc_fleet_cfg(tmp_path, 2))
+    try:
+        for name in fleet.ready_replicas():   # keep work outstanding
+            write_plan(fleet.transport_dir / name,
+                       ChaosPlan(hold_responses_s=30.0))
+        tiles = [synthetic_scene(32, 32, 950 + i) for i in range(6)]
+        handles = [fleet.submit(t, ("harris",), scene_key=f"pk-{i}")
+                   for i, t in enumerate(tiles)]
+        victim = next(iter(fleet.router._outstanding.values())).replica
+        fleet.sigkill_replica(victim)
+        for name in fleet.ready_replicas():
+            clear_plan(fleet.transport_dir / name)
+
+        def detected():
+            fleet.maintenance_tick()
+            return fleet.replicas[victim].state == DEAD
+        wait_until(detected, 20, desc="stale-lease detection")
+        for h in handles:                     # all accepted work completes
+            h.result(90)
+
+        spans = flight.spans()
+        admit_tids = {s.trace_id for s in spans if s.name == "admit"}
+        readmits = [s for s in spans if s.name == "readmit"]
+        assert readmits                       # the SIGKILL forced re-admission
+        for s in readmits:
+            attrs = dict(s.attrs)
+            assert s.trace_id in admit_tids   # original admission-minted id
+            assert attrs["old_replica"] == victim
+            assert attrs["new_replica"] != victim
+    finally:
+        fleet.close()

@@ -528,3 +528,97 @@ def test_service_stats_flat_snapshot():
         assert s["p99_queue_ms"] >= s["p50_queue_ms"] >= 0.0
     finally:
         svc.close()
+
+
+def test_work_item_settlement_is_idempotent_first_wins():
+    """Regression: ``stop()``/``kill()`` racing an in-flight
+    ``_run_batch`` used to double-resolve a future through ad-hoc
+    ``done()``-then-set guards.  `WorkItem.resolve`/`WorkItem.fail` are
+    the only settlement paths now: exactly one caller wins, losers are
+    no-ops, and many racing threads agree on the outcome."""
+    from concurrent.futures import Future
+
+    from repro.serve import ReplicaDied, WorkItem
+
+    def item():
+        return WorkItem(seq=0, tile=np.zeros((32, 32), np.float32),
+                        header=np.zeros(6, np.int32), bucket=32,
+                        algorithms=("harris",), digest="d",
+                        cfg_digest="c", future=Future())
+
+    # sequential: the second settlement (either kind) is a no-op
+    it = item()
+    assert it.resolve("first") and not it.resolve("second")
+    assert not it.fail(ReplicaDied("late kill"))
+    assert it.future.result(0) == "first"
+    it = item()
+    assert it.fail(ReplicaDied("kill won")) and not it.resolve("late batch")
+    with pytest.raises(ReplicaDied):
+        it.future.result(0)
+
+    # concurrent: N resolvers vs N failers on one item — exactly one
+    # winner, the future holds exactly that side's outcome
+    for trial in range(20):
+        it = item()
+        start = threading.Barrier(8)
+        wins = []
+
+        def run(op, tag):
+            start.wait()
+            if op():
+                wins.append(tag)
+        threads = (
+            [threading.Thread(target=run,
+                              args=((lambda i=i: it.resolve(f"r{i}")),
+                                    "resolve")) for i in range(4)] +
+            [threading.Thread(target=run,
+                              args=((lambda i=i: it.fail(
+                                  ReplicaDied(f"f{i}"))),
+                                    "fail")) for i in range(4)])
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(10)
+        assert len(wins) == 1, wins
+        if wins[0] == "resolve":
+            assert str(it.future.result(0)).startswith("r")
+        else:
+            with pytest.raises(ReplicaDied):
+                it.future.result(0)
+
+
+def test_scheduler_kill_vs_completion_race_single_outcome():
+    """Scheduler-level settle race: ``kill()`` fired while a batch is
+    mid-flight.  Whichever side wins, every accepted future settles
+    exactly once — a result bit-identical to the direct path, or
+    ``ReplicaDied`` — and never hangs or raises InvalidStateError."""
+    release = threading.Event()
+
+    def slow_runner(bucket, algorithms, batch):
+        release.wait(10)
+        for it in batch:
+            it.resolve({"ok": it.seq})
+
+    sched = BatchScheduler(slow_runner, max_batch=4,
+                           max_batch_delay_s=0.001, max_pending=64,
+                           name="settle-race")
+    futs = [sched.submit(np.zeros((32, 32), np.float32), np.zeros(6),
+                         32, ("harris",)) for _ in range(4)]
+    deadline = time.monotonic() + 5.0
+    while not sched._active and time.monotonic() < deadline:
+        time.sleep(0.002)                 # batch now on-device
+    killer = threading.Thread(target=sched.kill)
+    killer.start()
+    release.set()                         # completion races the kill
+    killer.join(10)
+    outcomes = []
+    for f in futs:
+        try:
+            outcomes.append(("ok", f.result(10)))
+        except Exception as e:  # noqa: BLE001
+            outcomes.append(("died", type(e).__name__))
+    assert len(outcomes) == 4             # every future settled, none hung
+    for kind, val in outcomes:
+        assert kind in ("ok", "died")
+        if kind == "died":
+            assert val == "ReplicaDied"
