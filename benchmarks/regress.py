@@ -1,0 +1,160 @@
+"""Perf-regression sentry over the committed ``BENCH_<rev>.json``
+snapshots (written by ``benchmarks/run.py --json``).
+
+Diffs the two newest snapshots — "newest" by the commit time of the
+``<rev>`` embedded in the filename (``git log -1 --format=%ct``), falling
+back to file mtime for revs git no longer knows — over their *shared*
+row keys: rows present in only one snapshot are listed but never judged
+(a new benchmark is not a regression, a deleted one is not a win).
+
+A row whose ``us_per_call`` grew by more than ``--warn``x is annotated
+(GitHub ``::warning::`` lines, so the CI run surfaces them inline);
+more than ``--fail``x exits non-zero.  Rows timing 0 (errored sections)
+are skipped — ``run.py`` already fails the build on those.
+
+    PYTHONPATH=src python benchmarks/regress.py
+    PYTHONPATH=src python benchmarks/regress.py --warn 1.25 --fail 1.5
+
+CI runs this as a *non-blocking* step (``continue-on-error``): shared
+runners are noisy enough that a hard gate on wall-time ratios would
+flake, but the annotations make a real cliff visible in review.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import subprocess
+from typing import Dict, List, Optional, Tuple
+
+
+def _rev_time(path: str) -> float:
+    """Commit time of the snapshot's embedded rev; file mtime when git
+    does not recognise it (rebased-away rev, exported tree)."""
+    rev = os.path.basename(path)[len("BENCH_"):-len(".json")]
+    try:
+        out = subprocess.run(
+            ["git", "log", "-1", "--format=%ct", rev],
+            capture_output=True, text=True, check=True,
+            cwd=os.path.dirname(os.path.abspath(path)) or ".")
+        return float(out.stdout.strip())
+    except Exception:  # noqa: BLE001 — unknown rev / not a repo
+        return os.path.getmtime(path)
+
+
+def newest_snapshots(root: str = ".") -> List[str]:
+    """Every ``BENCH_<rev>.json`` under ``root``, oldest → newest by
+    commit time (mtime fallback)."""
+    paths = glob.glob(os.path.join(root, "BENCH_*.json"))
+    return sorted(paths, key=_rev_time)
+
+
+def _rows(snapshot: dict) -> Dict[str, float]:
+    out = {}
+    for row in snapshot.get("rows", ()):
+        us = float(row.get("us_per_call", 0.0))
+        if us > 0:                       # errored sections time as 0
+            out[str(row["name"])] = us
+    return out
+
+
+def diff_snapshots(old: dict, new: dict, *, warn: float = 1.25,
+                   fail: float = 1.5) -> List[Dict[str, object]]:
+    """Compare two snapshot dicts; one result row per benchmark with
+    ``status`` in ``ok | warn | fail | added | removed``.  Only shared
+    keys get a ratio/status judgement; ``warn``/``fail`` are growth
+    ratios (new/old) on ``us_per_call``."""
+    a, b = _rows(old), _rows(new)
+    out: List[Dict[str, object]] = []
+    for name in sorted(set(a) | set(b)):
+        if name not in b:
+            out.append({"name": name, "status": "removed",
+                        "old_us": a[name], "new_us": None, "ratio": None})
+            continue
+        if name not in a:
+            out.append({"name": name, "status": "added",
+                        "old_us": None, "new_us": b[name], "ratio": None})
+            continue
+        ratio = b[name] / a[name]
+        status = "ok"
+        if ratio > fail:
+            status = "fail"
+        elif ratio > warn:
+            status = "warn"
+        out.append({"name": name, "status": status, "old_us": a[name],
+                    "new_us": b[name], "ratio": ratio})
+    return out
+
+
+def render(results: List[Dict[str, object]], old_rev: str,
+           new_rev: str) -> Tuple[int, int]:
+    """Print the diff table + GitHub annotations; returns
+    ``(n_warn, n_fail)``."""
+    n_warn = n_fail = 0
+    print(f"perf regress: {old_rev} -> {new_rev} "
+          f"({sum(r['status'] not in ('added', 'removed') for r in results)}"
+          f" shared rows)")
+    for r in results:
+        if r["status"] == "added":
+            print(f"  + {r['name']:<40} (new: {r['new_us']:.1f} us)")
+        elif r["status"] == "removed":
+            print(f"  - {r['name']:<40} (was: {r['old_us']:.1f} us)")
+        else:
+            mark = {"ok": " ", "warn": "!", "fail": "X"}[r["status"]]
+            print(f"  {mark} {r['name']:<40} {r['old_us']:>12.1f} -> "
+                  f"{r['new_us']:>12.1f} us  ({r['ratio']:.2f}x)")
+        if r["status"] == "warn":
+            n_warn += 1
+            print(f"::warning title=perf regression::{r['name']} "
+                  f"slowed {r['ratio']:.2f}x "
+                  f"({r['old_us']:.1f} -> {r['new_us']:.1f} us/call)")
+        elif r["status"] == "fail":
+            n_fail += 1
+            print(f"::warning title=perf cliff::{r['name']} "
+                  f"slowed {r['ratio']:.2f}x "
+                  f"({r['old_us']:.1f} -> {r['new_us']:.1f} us/call)")
+    return n_warn, n_fail
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", default=".",
+                    help="directory holding the BENCH_<rev>.json snapshots")
+    ap.add_argument("--warn", type=float, default=1.25,
+                    help="growth ratio that annotates a warning")
+    ap.add_argument("--fail", type=float, default=1.5,
+                    help="growth ratio that fails the sentry (exit 1)")
+    ap.add_argument("--old", default=None, metavar="PATH",
+                    help="explicit old snapshot (default: 2nd-newest)")
+    ap.add_argument("--new", default=None, metavar="PATH",
+                    help="explicit new snapshot (default: newest)")
+    args = ap.parse_args(argv)
+
+    if args.old and args.new:
+        old_path, new_path = args.old, args.new
+    else:
+        snaps = newest_snapshots(args.root)
+        if len(snaps) < 2:
+            print(f"perf regress: {len(snaps)} snapshot(s) under "
+                  f"{args.root!r} — need 2 to diff; skipping")
+            return 0
+        old_path, new_path = snaps[-2], snaps[-1]
+
+    with open(old_path) as f:
+        old = json.load(f)
+    with open(new_path) as f:
+        new = json.load(f)
+    results = diff_snapshots(old, new, warn=args.warn, fail=args.fail)
+    n_warn, n_fail = render(results, old.get("rev", old_path),
+                            new.get("rev", new_path))
+    if n_fail:
+        print(f"PERF REGRESS FAILED: {n_fail} row(s) beyond "
+              f"{args.fail:.2f}x ({n_warn} warned)")
+        return 1
+    print(f"perf regress ok ({n_warn} warning(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

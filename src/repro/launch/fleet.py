@@ -56,6 +56,10 @@ def build_fleet(args) -> Fleet:
                       or tempfile.mkdtemp(prefix="difet-fleet-cache-"),
                       lease_ttl_s=args.lease_ttl,
                       proc=args.proc,
+                      # proc fleets run the telemetry plane: workers ship
+                      # metric deltas + spans, the parent aggregates
+                      # (repro/obs/{ship,agg,slo}.py)
+                      telemetry=args.proc,
                       slo_p99_s=args.slo_ms * 1e-3)
     return Fleet(cfg)
 
@@ -166,7 +170,13 @@ def chaos_summary(fleet, sheds) -> None:
     """Post-run summary after a ``--kill-after`` chaos run, answered
     from the metrics registry (`repro/obs/metrics.py`): sheds by reason,
     re-admissions, replica deaths, and the shared disk tier's hit rate
-    — the 'did the fleet absorb the kill' digest."""
+    — the 'did the fleet absorb the kill' digest.  With the telemetry
+    plane on (proc fleets), the digest extends with rows only the
+    *aggregated* fleet registry can answer: per-worker execution counts
+    shipped from inside the worker processes, the workers' own disk-tier
+    hit counters merged under ``difet.fleet.*``, and each worker
+    flight-recorder dump correlated with the parent death/shed events
+    recorded around it (`repro/obs/agg.py`)."""
     m = obs_metrics.registry().snapshot()
     s = fleet.stats()
     print("chaos summary (metrics registry):")
@@ -183,6 +193,26 @@ def chaos_summary(fleet, sheds) -> None:
     print(f"  disk tier: {int(dh)} hits / {int(dm)} misses "
           f"({rate:.1%} hit rate)")
     print(f"  outstanding after drain: {s['outstanding']}")
+    agg = getattr(fleet, "telemetry", None)
+    if agg is None:
+        return
+    fleet.poll_telemetry()                # sweep any last shipments
+    m = obs_metrics.registry().snapshot()
+    print("  fleet telemetry (aggregated worker shipments, "
+          f"{agg.ingested} applied / {agg.dropped} dropped):")
+    for w in sorted(agg.worker_counts):
+        execs = agg.worker_counts[w].get("difet.scheduler.queue_s", 0)
+        state = "retired" if agg.worker_final.get(w) else "live/killed"
+        print(f"    {w} (pid {agg.worker_pids.get(w, 0)}, {state}): "
+              f"{execs} requests executed in-worker")
+    wdh = m.get("difet.fleet.cache.disk_hits", 0)
+    wdm = m.get("difet.fleet.cache.disk_misses", 0)
+    print(f"    worker-side disk tier: {int(wdh)} hits / {int(wdm)} "
+          f"misses (from inside the worker processes)")
+    for row in agg.correlate_dumps():
+        kinds = sorted({str(e.get('kind')) for e in row["parent_events"]})
+        print(f"    dump {row['worker']}[{row['reason']}] -> "
+              f"{row['path']}  parent events nearby: {kinds or ['none']}")
 
 
 def smoke(args) -> int:

@@ -12,10 +12,24 @@ One package, four concerns, threaded through every serving layer:
 * ``profile.py`` — kernel profiling hooks keyed by the PR 5 dispatch
   bucket, plus optional ``jax.profiler`` capture;
 * ``export.py`` — Chrome-trace JSON + flat metrics JSON exporters, the
-  schema validator CI gates on, and the latency-breakdown report.
+  Prometheus text renderer, the schema validator CI gates on, and the
+  latency-breakdown report.
 
-Driver: ``python -m repro.launch.obs`` (traced fleet run → artifacts →
-report; ``--explain-dispatch`` decodes the dispatch cache).
+The PR 9 fleet telemetry plane extends all of it across process
+boundaries:
+
+* ``ship.py`` — worker-side periodic *delta* shipping (metric bucket
+  deltas + span batches) over the mailbox ``telemetry/`` channel;
+* ``agg.py`` — parent-side aggregation: exact bucket-wise histogram
+  merges into ``difet.fleet.*``, cross-process span stitching onto one
+  rebased timeline, worker-dump correlation;
+* ``slo.py`` — multi-window SLO burn-rate monitoring over the
+  aggregated fleet metrics, feeding the autoscaler and the flight
+  recorder.
+
+Drivers: ``python -m repro.launch.obs`` (traced fleet run → artifacts →
+report; ``--explain-dispatch`` decodes the dispatch cache;
+``--fleet --smoke`` gates the cross-process telemetry plane).
 """
 from repro.obs.metrics import (Counter, Gauge, Histogram,  # noqa: F401
                                MetricsRegistry, registry, set_registry)
@@ -28,4 +42,9 @@ from repro.obs.profile import (KernelProfiler, profiler,  # noqa: F401
 from repro.obs.export import (spans_to_chrome, write_chrome_trace,  # noqa: F401
                               metrics_payload, write_metrics_json,
                               validate_chrome_trace, latency_breakdown,
-                              render_report)
+                              render_report, render_prometheus)
+from repro.obs.ship import (TelemetryShipper, span_to_wire,  # noqa: F401
+                            span_from_wire)
+from repro.obs.agg import (TelemetryAggregator,  # noqa: F401
+                           fleet_metric_name)
+from repro.obs.slo import BurnRateMonitor, SloPolicy  # noqa: F401

@@ -30,7 +30,7 @@ from repro.obs.trace import Span
 
 __all__ = ["spans_to_chrome", "write_chrome_trace", "metrics_payload",
            "write_metrics_json", "validate_chrome_trace",
-           "latency_breakdown", "render_report"]
+           "latency_breakdown", "render_report", "render_prometheus"]
 
 # the per-layer latency histograms the breakdown table reports, in
 # request-path order (docs/observability.md metric table)
@@ -58,7 +58,7 @@ def spans_to_chrome(spans: Sequence[Span],
         events.append({"name": s.name, "cat": s.layer, "ph": "X",
                        "ts": (s.t0 - t_base) * 1e6,
                        "dur": max(0.0, s.t1 - s.t0) * 1e6,
-                       "pid": 0, "tid": s.thread, "args": args})
+                       "pid": s.pid, "tid": s.thread, "args": args})
     doc = {"traceEvents": events, "displayTimeUnit": "ms",
            "metadata": {"span_count": len(events), **(metadata or {})}}
     return doc
@@ -132,6 +132,54 @@ def validate_chrome_trace(doc: dict,
             problems.append(f"no spans from required layer {layer!r} "
                             f"(saw {sorted(l for l in seen_layers if l)})")
     return problems
+
+
+def _prom_name(name: str) -> str:
+    """Metric name → Prometheus identifier (dots and every other
+    non-``[a-zA-Z0-9_]`` character become underscores)."""
+    out = "".join(c if c.isalnum() or c == "_" else "_" for c in name)
+    return out if not out[:1].isdigit() else "_" + out
+
+
+def _prom_num(v: float) -> str:
+    """Render a sample value the way Prometheus text format expects
+    (integers without a trailing ``.0``, floats in short form)."""
+    f = float(v)
+    return str(int(f)) if f == int(f) else format(f, ".10g")
+
+
+def render_prometheus(
+        registry: Optional[_metrics.MetricsRegistry] = None) -> str:
+    """Render the registry in the Prometheus text exposition format.
+
+    Counters and gauges become single samples; histograms expose their
+    raw buckets as *cumulative* ``<name>_bucket{le="<edge>"}`` series
+    (Prometheus semantics: each bucket counts every observation at or
+    below its upper edge, closing with ``le="+Inf"``) plus ``_sum`` and
+    ``_count``.  Bucket edges print via ``%.6g`` so the output is
+    byte-stable — the golden test in ``tests/test_telemetry.py`` pins
+    it.  Scrape-side, ``histogram_quantile()`` over these buckets agrees
+    with `Histogram.quantile` to within one bucket width."""
+    reg = registry or _metrics.registry()
+    lines: List[str] = []
+    for name, m in sorted(reg.metrics().items()):
+        pname = _prom_name(name)
+        if isinstance(m, _metrics.Histogram):
+            lines.append(f"# TYPE {pname} histogram")
+            cum = 0
+            for edge, c in zip(m.bounds, m.counts()):
+                cum += c
+                lines.append(f'{pname}_bucket{{le="{edge:.6g}"}} {cum}')
+            lines.append(f'{pname}_bucket{{le="+Inf"}} {m.count}')
+            lines.append(f"{pname}_sum {_prom_num(m.sum)}")
+            lines.append(f"{pname}_count {m.count}")
+        elif isinstance(m, _metrics.Gauge):
+            lines.append(f"# TYPE {pname} gauge")
+            lines.append(f"{pname} {_prom_num(m.value)}")
+        else:
+            lines.append(f"# TYPE {pname} counter")
+            lines.append(f"{pname} {_prom_num(m.value)}")
+    return "\n".join(lines) + ("\n" if lines else "")
 
 
 def latency_breakdown(metrics: Dict[str, object]) -> List[dict]:

@@ -205,6 +205,37 @@ class Histogram:
             return None
         return self._interpolate(window, total, q, vmin, vmax)
 
+    def merge_counts(self, counts: Sequence[int], *, count: Optional[int] = None,
+                     sum: float = 0.0, min: float = math.inf,
+                     max: float = -math.inf) -> None:
+        """Fold another histogram's per-bucket counts (or a counts
+        *delta* between two snapshots) into this one, bucket-wise.  Both
+        histograms must share the same ``bounds`` — under that invariant
+        the merge is *exact*: the merged histogram is indistinguishable
+        from one that observed the union stream (the fleet-telemetry
+        mergeability property test in ``tests/test_telemetry.py``).
+        ``count``/``sum`` are the observation count and value sum covered
+        by ``counts`` (``count`` defaults to ``sum(counts)``);
+        ``min``/``max`` widen the tracked extrema."""
+        counts = [int(c) for c in counts]
+        if len(counts) != len(self._counts):
+            raise ValueError(
+                f"merge shape mismatch: {len(counts)} buckets vs "
+                f"{len(self._counts)} (different bounds?)")
+        n = int(count) if count is not None else 0
+        if count is None:
+            for c in counts:
+                n += c
+        with self._lock:
+            for i, c in enumerate(counts):
+                self._counts[i] += int(c)
+            self.count += n
+            self.sum += float(sum)
+            if min < self.min:
+                self.min = float(min)
+            if max > self.max:
+                self.max = float(max)
+
     @property
     def mean(self) -> float:
         """Arithmetic mean of every observation (exact, not bucketed)."""
@@ -271,6 +302,13 @@ class MetricsRegistry:
         """Sorted registered metric names."""
         with self._lock:
             return sorted(self._metrics)
+
+    def metrics(self) -> Dict[str, object]:
+        """``{name: metric object}`` snapshot of the namespace (the
+        metric objects themselves, not copies — the Prometheus exporter
+        and the telemetry shipper walk this to read raw bucket counts)."""
+        with self._lock:
+            return dict(self._metrics)
 
     def snapshot(self) -> Dict[str, object]:
         """Flat ``{name: value-or-histogram-summary}`` dict of every

@@ -48,8 +48,11 @@ class Span:
     ``scheduler`` / ``batch`` / ``kernel`` / ``cache`` / ``compile`` /
     ``job`` — docs/observability.md), ``trace_id`` ties the span to the
     admission that minted it (empty for background work), ``t0``/``t1``
-    are ``time.monotonic()`` seconds, and ``attrs`` carries small
-    JSON-able details (replica, bucket, shed reason, …)."""
+    are ``time.monotonic()`` seconds, ``attrs`` carries small JSON-able
+    details (replica, bucket, shed reason, …), and ``pid`` is the
+    recording process (0 = unattributed; the fleet-telemetry aggregator
+    stamps worker pids so each worker renders as its own Chrome-trace
+    process lane)."""
     name: str
     layer: str
     trace_id: str
@@ -59,6 +62,7 @@ class Span:
     t1: float
     thread: str
     attrs: Tuple[Tuple[str, object], ...] = ()
+    pid: int = 0
 
     @property
     def duration_s(self) -> float:
@@ -111,6 +115,19 @@ class FlightRecorder:
         """Snapshot of the ring, oldest first."""
         with self._lock:
             return list(self._ring)
+
+    def take_since(self, cursor: int) -> Tuple[List[Span], int]:
+        """Spans emitted since a previous cursor (``(spans, new_cursor)``
+        — start from cursor 0).  The incremental read the telemetry
+        shipper batches over: spans that fell off the ring between reads
+        are lost (bounded shipping is the contract), but nothing is ever
+        shipped twice."""
+        with self._lock:
+            new = max(0, self.emitted - int(cursor))
+            if new == 0:
+                return [], self.emitted
+            tail = list(self._ring)[-min(new, len(self._ring)):]
+            return tail, self.emitted
 
     def clear(self) -> None:
         """Empty the ring (per-phase isolation in drivers/tests)."""
@@ -214,7 +231,8 @@ def emit_span(name: str, layer: str, t0: float, t1: float, *,
                             else trace_id),
                   span_id=sid, parent_id=parent_id, t0=t0, t1=t1,
                   thread=threading.current_thread().name,
-                  attrs=tuple(sorted(attrs.items()))))
+                  attrs=tuple(sorted(attrs.items())),
+                  pid=os.getpid()))
     return sid
 
 

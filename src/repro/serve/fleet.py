@@ -57,6 +57,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.job import LeaseBoard
 from repro.obs import metrics as obs_metrics
+from repro.obs.agg import TelemetryAggregator
+from repro.obs.slo import BurnRateMonitor, SloPolicy
 from repro.serve import chaos
 from repro.serve.api import FeatureService, ServeConfig
 from repro.serve.proc import ProcReplicaClient
@@ -107,6 +109,12 @@ class FleetConfig:
     transport_dir: Optional[str] = None   # worker mailboxes (temp dir default)
     heartbeat_interval_s: float = 0.2
     worker_ready_timeout_s: float = 180.0
+    # fleet telemetry plane (proc mode only): workers ship metric deltas
+    # + span batches every interval (repro/obs/ship.py), the parent
+    # merges them into difet.fleet.* (repro/obs/agg.py) and runs the SLO
+    # burn-rate monitor over the aggregate (repro/obs/slo.py)
+    telemetry: bool = False
+    telemetry_interval_s: float = 0.25
     # SLO autoscaler policy
     slo_p99_s: float = 0.5
     slo_scale_down_factor: float = 0.5
@@ -179,6 +187,17 @@ class Fleet:
         # admission→completion histogram, baselined each tick
         self._lat_hist = _reg.histogram("difet.fleet.request_latency_s")
         self._lat_baseline = self._lat_hist.counts()
+        # fleet telemetry plane: aggregator + SLO burn-rate monitor over
+        # the *aggregated* latency histogram and typed shed counters —
+        # the autoscaler's p99 becomes fleet-wide, not parent-only
+        self.telemetry: Optional[TelemetryAggregator] = None
+        self.slo_monitor: Optional[BurnRateMonitor] = None
+        if self.cfg.proc and self.cfg.telemetry:
+            self.telemetry = TelemetryAggregator(_reg)
+            self.slo_monitor = BurnRateMonitor(
+                self._lat_hist,
+                shed_counters=self._shed_counters,
+                policy=SloPolicy(latency_slo_s=self.cfg.slo_p99_s))
         if self.cfg.proc:
             # parallel spawn: launch every worker first (they warm
             # concurrently — jax import + compile dominates), then wait
@@ -206,7 +225,9 @@ class Fleet:
                 self.lease_dir,
                 lease_ttl_s=self.cfg.lease_ttl_s,
                 heartbeat_interval_s=self.cfg.heartbeat_interval_s,
-                warm_algorithm_sets=self.cfg.warm_algorithm_sets)
+                warm_algorithm_sets=self.cfg.warm_algorithm_sets,
+                telemetry_interval_s=(self.cfg.telemetry_interval_s
+                                      if self.cfg.telemetry else 0.0))
             rep = Replica(name, client, kind="proc")
             self.replicas[name] = rep
         rep.state = WARMING
@@ -255,6 +276,7 @@ class Fleet:
             rep.state = DRAINING
         self.router.set_accepting(name, False)
         rep.service.drain(timeout)
+        self.poll_telemetry()     # the worker's retire flush, if any
         self.router.remove_replica(name)
         self.leases.release(name, name)
         rep.state = RETIRED
@@ -275,6 +297,9 @@ class Fleet:
         self.router.remove_replica(name, died=True)
         self._m_dead.inc()
         self._g_ready.set(len(self.ready_replicas()))
+        if self.telemetry is not None:
+            self.telemetry.record_event("replica_died", replica=name,
+                                        cause="kill")
         return self.router.readmitted
 
     def sigkill_replica(self, name: str) -> int:
@@ -291,6 +316,30 @@ class Fleet:
         chaos.sigkill(pid)
         return pid
 
+    # ---- fleet telemetry ----------------------------------------------------
+    def _shed_counters(self):
+        reg = obs_metrics.registry()
+        return [m for name, m in reg.metrics().items()
+                if name.startswith("difet.router.shed.")
+                and isinstance(m, obs_metrics.Counter)]
+
+    def poll_telemetry(self) -> int:
+        """Drain every worker mailbox's ``telemetry/`` channel into the
+        aggregator (`repro/obs/agg.py`); returns shipments applied.
+        No-op (0) when the telemetry plane is off."""
+        if self.telemetry is None:
+            return 0
+        for ev in self.router.drain_events():
+            self.telemetry.record_event(**ev)
+        with self._lock:
+            reps = [r for r in self.replicas.values() if r.kind == "proc"]
+        applied = 0
+        for rep in reps:
+            payloads = rep.service.mailbox.collect_telemetry()
+            if payloads:
+                applied += self.telemetry.ingest(payloads)
+        return applied
+
     # ---- liveness + autoscaling ---------------------------------------------
     def ready_replicas(self) -> Tuple[str, ...]:
         """Names of replicas currently in the READY state."""
@@ -306,6 +355,7 @@ class Fleet:
         SIGKILL, hung worker, stalled heartbeat — declares them DEAD,
         reaps any zombie process, and re-admits their outstanding work.
         Returns the names declared dead this tick."""
+        self.poll_telemetry()
         died = []
         with self._lock:
             candidates = [(n, r) for n, r in self.replicas.items()
@@ -325,6 +375,9 @@ class Fleet:
                 self.leases.release(name, name)
                 self._m_dead.inc()
                 self._m_stale.inc()
+                if self.telemetry is not None:
+                    self.telemetry.record_event(
+                        "replica_died", replica=name, cause="stale_lease")
                 died.append(name)
             elif rep.runner_alive():
                 self.leases.acquire(name, name)      # refresh own lease
@@ -361,10 +414,21 @@ class Fleet:
         plus queue depth as the fast-path up-trigger.  Returns the action
         taken: ``"scale_up:<name>"``, ``"scale_down:<name>"``, or
         ``"hold"`` — and records non-hold decisions in
-        ``scale_events``."""
+        ``scale_events``.
+
+        With the telemetry plane on, the p99 comes from the SLO
+        burn-rate monitor's fast window over the *fleet-aggregated*
+        latency histogram (worker shipments merged first) instead of the
+        parent-only baseline — and a sustained burn-rate breach takes
+        one deduped flight-recorder dump (`repro/obs/slo.py`)."""
         self.router.harvest_latencies()
-        p99 = self._lat_hist.quantile_since(self._lat_baseline, 0.99)
-        self._lat_baseline = self._lat_hist.counts()
+        if self.slo_monitor is not None:
+            self.poll_telemetry()
+            p99 = self.slo_monitor.tick().get("p99_fast")
+            self._lat_baseline = self._lat_hist.counts()
+        else:
+            p99 = self._lat_hist.quantile_since(self._lat_baseline, 0.99)
+            self._lat_baseline = self._lat_hist.counts()
         ready = self.ready_replicas()
         if not ready:
             if len(self.replicas) < self.cfg.max_replicas:
@@ -484,6 +548,7 @@ class Fleet:
         self.router.close()
         for name in list(self.replicas):
             self.drain_replica(name, timeout)
+        self.poll_telemetry()     # sweep any last shipments
         with self._lock:
             reps = list(self.replicas.values())
         for rep in reps:

@@ -126,16 +126,36 @@ def _decode_response(meta: Dict, arrays: Dict) -> ExtractResponse:
 def run_worker(name: str, mailbox_dir: str, lease_dir: str, *,
                lease_ttl_s: float, heartbeat_interval_s: float,
                serve_config_path: str, warm_sets: List[List[str]],
-               poll_interval_s: float = 0.003) -> int:
+               poll_interval_s: float = 0.003,
+               telemetry_interval_s: float = 0.0) -> int:
     """Worker main loop (see module docstring).  Returns the process
     exit code: 0 on a clean drain.  Faults from the mailbox's chaos plan
     are honoured *every* iteration — a live worker can stop
     heartbeating, sit on finished responses, or ``os._exit(137)``
-    after its N-th response."""
+    after its N-th response.
+
+    ``telemetry_interval_s > 0`` turns the fleet telemetry plane on for
+    this worker: a `FlightRecorder` is installed (so the scheduler/batch
+    spans carry the parent-minted trace ids), and a
+    `repro/obs/ship.py::TelemetryShipper` spools metric deltas + span
+    batches onto the mailbox's ``telemetry/`` channel every interval,
+    with one forced flush on drain so no tail telemetry is lost."""
     mbox = WorkerMailbox(mailbox_dir)
     leases = LeaseBoard(lease_dir, ttl_s=lease_ttl_s)
     cfg = serve_config_from_json(
         json.loads(Path(serve_config_path).read_text()))
+    shipper = None
+    if telemetry_interval_s > 0:
+        from repro.obs import trace as obs_trace
+        from repro.obs.ship import TelemetryShipper
+        dump_dir = os.environ.get("DIFET_CHAOS_DUMP_DIR") \
+            or str(mbox.root / "dumps")
+        Path(dump_dir).mkdir(parents=True, exist_ok=True)
+        obs_trace.set_recorder(
+            obs_trace.FlightRecorder(capacity=8192, dump_dir=dump_dir))
+        shipper = TelemetryShipper(
+            mbox, name, recorder=obs_trace.get_recorder(),
+            interval_s=telemetry_interval_s)
     svc = FeatureService(cfg, name=name)
     if warm_sets:
         svc.warmup([tuple(s) for s in warm_sets])
@@ -183,10 +203,14 @@ def run_worker(name: str, mailbox_dir: str, lease_dir: str, *,
         if now - last_stats >= 0.25:
             mbox.write_stats(_jsonable(svc.stats()))
             last_stats = now
+        if shipper is not None:
+            shipper.maybe_ship()
         if (mbox.drain_requested() and not pending
                 and not mbox.claim_requests()):
             mbox.write_stats(_jsonable(svc.stats()))
             svc.close()
+            if shipper is not None:
+                shipper.ship(final=True)   # retire flush: no tail loss
             leases.release(name, name)
             return 0
         time.sleep(poll_interval_s)
@@ -202,13 +226,15 @@ def _worker_main(argv=None) -> int:
     ap.add_argument("--serve-config", required=True)
     ap.add_argument("--warm-sets", default="[]")
     ap.add_argument("--poll-interval", type=float, default=0.003)
+    ap.add_argument("--telemetry-interval", type=float, default=0.0)
     a = ap.parse_args(argv)
     return run_worker(a.name, a.dir, a.lease_dir,
                       lease_ttl_s=a.lease_ttl,
                       heartbeat_interval_s=a.heartbeat_interval,
                       serve_config_path=a.serve_config,
                       warm_sets=json.loads(a.warm_sets),
-                      poll_interval_s=a.poll_interval)
+                      poll_interval_s=a.poll_interval,
+                      telemetry_interval_s=a.telemetry_interval)
 
 
 # -- parent-side proxy -------------------------------------------------------
@@ -314,7 +340,8 @@ class ProcReplicaClient:
     def spawn(cls, name: str, root, serve_cfg: ServeConfig, lease_dir, *,
               lease_ttl_s: float = 5.0, heartbeat_interval_s: float = 0.2,
               warm_algorithm_sets=(), poll_interval_s: float = 0.002,
-              worker_poll_s: float = 0.003) -> "ProcReplicaClient":
+              worker_poll_s: float = 0.003,
+              telemetry_interval_s: float = 0.0) -> "ProcReplicaClient":
         """Launch the worker process (``python -m repro.serve.proc``)
         with its mailbox under ``root``; returns immediately — pair with
         :meth:`wait_ready`.  stdout/stderr land in
@@ -336,7 +363,8 @@ class ProcReplicaClient:
                "--serve-config", str(cfg_path),
                "--warm-sets",
                json.dumps([list(s) for s in warm_algorithm_sets]),
-               "--poll-interval", str(worker_poll_s)]
+               "--poll-interval", str(worker_poll_s),
+               "--telemetry-interval", str(telemetry_interval_s)]
         with open(root / "worker.log", "ab") as log:
             proc = subprocess.Popen(cmd, stdout=log,
                                     stderr=subprocess.STDOUT, env=env)

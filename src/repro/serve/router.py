@@ -276,6 +276,11 @@ class Router:
         self.routed_spill = 0
         self.shed_by_reason: Dict[str, int] = {}
         self.tenant_counts: Dict[str, Dict[str, int]] = {}
+        # bounded shed/readmit event feed: the fleet drains this into
+        # the telemetry aggregator's correlation log (repro/obs/agg.py)
+        # so worker flight-recorder dumps can be joined with the parent
+        # admission decisions taken around them
+        self._events: List[Dict[str, object]] = []
         # registry mirrors (difet.router.*) for the per-run metrics JSON
         _reg = obs_metrics.registry()
         self._m_admitted = _reg.counter("difet.router.admitted")
@@ -318,6 +323,14 @@ class Router:
         with self._cv:
             return tuple(sorted(self._slots))
 
+    def drain_events(self) -> List[Dict[str, object]]:
+        """Hand over (and clear) the bounded shed/readmit event feed —
+        consumed by `serve/fleet.py::Fleet.poll_telemetry` into the
+        telemetry aggregator's dump-correlation log."""
+        with self._cv:
+            out, self._events = self._events, []
+        return out
+
     # ---- admission + routing ----------------------------------------------
     def _bucket(self, tenant: str) -> TokenBucket:
         b = self._buckets.get(tenant)
@@ -335,6 +348,9 @@ class Router:
             t = self.tenant_counts.setdefault(
                 tenant, {"admitted": 0, "shed": 0})
             t["shed"] += 1
+            self._events.append({"kind": "shed", "reason": reason,
+                                 "tenant": tenant, "t": time.monotonic()})
+            del self._events[:-256]
         obs_metrics.registry().counter(f"difet.router.shed.{reason}").inc()
         rec = obs_trace.get_recorder()
         if rec.enabled:
@@ -519,6 +535,11 @@ class Router:
                 req.handle = new_handle
                 req.generation += 1
                 self.readmitted += 1
+                self._events.append(
+                    {"kind": "readmit", "rid": req.rid,
+                     "from": dead_replica, "to": target,
+                     "t": time.monotonic()})
+                del self._events[:-256]
                 self._cv.notify_all()
             self._m_readmitted.inc()
             if obs_trace.enabled():

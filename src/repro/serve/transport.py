@@ -18,6 +18,8 @@ Layout (one :class:`WorkerMailbox` directory per replica)::
         work/   <rid>.npz      claimed requests  (worker renames in)
         resp/   <rid>.npz      worker → router   (atomic rename)
         ctrl/   drain          control flags (empty marker files)
+        telemetry/ <w>-<seq>.npz  worker → router telemetry shipments
+                               (repro/obs/ship.py; parent consumes)
         chaos.json             fault-injection plan (serve/chaos.py)
         ready.npz              worker warm-up complete marker
         stats.npz              worker's latest stats() snapshot
@@ -42,14 +44,13 @@ import io
 import json
 import os
 import threading
-import zipfile
 from pathlib import Path
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 __all__ = ["encode_message", "decode_message", "write_message",
-           "read_message", "WorkerMailbox"]
+           "read_message", "read_snapshot", "WorkerMailbox"]
 
 _META = "__meta__"
 
@@ -113,11 +114,32 @@ def read_message(path: Path) -> Optional[Tuple[Dict[str, object],
         return None
     try:
         return decode_message(raw)
-    except (ValueError, KeyError, OSError, zipfile.BadZipFile):
+    except Exception:  # noqa: BLE001 — any torn/corrupt payload; np.load
+        # raises EOFError on an empty file and struct.error on a partial
+        # zip header, beyond the documented ValueError/BadZipFile set
         try:
             path.rename(path.with_suffix(path.suffix + ".corrupt"))
         except OSError:
             pass
+        return None
+
+
+def read_snapshot(path: Path) -> Optional[Tuple[Dict[str, object],
+                                                Dict[str, np.ndarray]]]:
+    """Read a *republished* snapshot channel (``stats.npz``,
+    ``ready.npz``): like `read_message`, but a torn/partial/corrupt file
+    reads as "not yet" **without** quarantining — the writer overwrites
+    the same path every interval, so renaming a torn read aside would
+    discard the next perfectly good publish's landing spot and turn one
+    torn write into a permanently missing channel.  Regression-tested
+    against truncated stats files in ``tests/test_telemetry.py``."""
+    try:
+        raw = path.read_bytes()
+    except OSError:
+        return None
+    try:
+        return decode_message(raw)
+    except Exception:  # noqa: BLE001 — torn mid-write/mid-rename read
         return None
 
 
@@ -136,7 +158,8 @@ class WorkerMailbox:
         self.work = self.root / "work"
         self.resp = self.root / "resp"
         self.ctrl = self.root / "ctrl"
-        for d in (self.req, self.work, self.resp, self.ctrl):
+        self.tele = self.root / "telemetry"
+        for d in (self.req, self.work, self.resp, self.ctrl, self.tele):
             d.mkdir(parents=True, exist_ok=True)
 
     # ---- router side --------------------------------------------------------
@@ -208,14 +231,40 @@ class WorkerMailbox:
         """Has the router asked this worker to drain?"""
         return (self.ctrl / "drain").exists()
 
+    # ---- telemetry channel (repro/obs/ship.py → repro/obs/agg.py) -----------
+    def publish_telemetry(self, worker: str, seq: int,
+                          meta: Dict[str, object]) -> None:
+        """Worker: spool one sequenced telemetry shipment (atomic
+        rename, like every other message; the parent consumes it)."""
+        write_message(self.tele / f"{worker}-{seq:08d}.npz", meta)
+
+    def collect_telemetry(self) -> List[Dict[str, object]]:
+        """Router: drain every spooled telemetry shipment, in sequence
+        order, deleting each file once read — the channel is a queue,
+        not a snapshot.  Torn/corrupt shipments are quarantined by
+        `read_message` and skipped (one lost interval of deltas, never a
+        double-count)."""
+        out = []
+        for path in sorted(self.tele.glob("*.npz")):
+            msg = read_message(path)
+            if msg is not None:
+                out.append(msg[0])
+            try:
+                path.unlink()
+            except OSError:
+                pass                      # quarantined or raced: gone either way
+        return out
+
     # ---- shared markers -----------------------------------------------------
     def write_ready(self, info: Dict[str, object]) -> None:
         """Worker: publish the warm-up-complete marker (atomic)."""
         write_message(self.root / "ready.npz", info)
 
     def read_ready(self) -> Optional[Dict[str, object]]:
-        """Router: the worker's ready marker, or None while warming."""
-        msg = read_message(self.root / "ready.npz")
+        """Router: the worker's ready marker — None while warming *or*
+        on a torn/partial read (`read_snapshot`: a snapshot channel
+        reads as "not yet", it is never quarantined)."""
+        msg = read_snapshot(self.root / "ready.npz")
         return msg[0] if msg else None
 
     def write_stats(self, stats: Dict[str, object]) -> None:
@@ -223,7 +272,8 @@ class WorkerMailbox:
         write_message(self.root / "stats.npz", stats)
 
     def read_stats(self) -> Optional[Dict[str, object]]:
-        """Router: the worker's last stats snapshot (None before the
-        first publish or after a torn write)."""
-        msg = read_message(self.root / "stats.npz")
+        """Router: the worker's last stats snapshot — None before the
+        first publish or on a torn/partial read (`read_snapshot`; the
+        next periodic publish repairs the channel)."""
+        msg = read_snapshot(self.root / "stats.npz")
         return msg[0] if msg else None
